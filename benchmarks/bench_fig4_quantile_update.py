@@ -1,0 +1,86 @@
+"""Fig. 4 reproduction: quantile-transformation update for a cold-start client.
+
+Three predictors over the same 8-model ensemble, evaluated on live client
+traffic against the target (reference) distribution, per score bin:
+
+  predictor raw — no quantile transformation (scores collapse near 0);
+  predictor v0  — cold-start default T^Q_v0 (Beta-mixture prior on training
+                  scores) — bounded low-bin error, drifts in high bins;
+  predictor v1  — custom client-specific T^Q_v1 fit on live traffic —
+                  restores alignment.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import bin_relative_error
+from repro.core.transforms import quantile_map
+from repro.experiments.fraud_world import FraudWorld
+
+ENSEMBLE = tuple(f"m{i+1}" for i in range(8))
+
+
+def run(quick: bool = False) -> dict:
+    n_live = 120_000 if quick else 400_000
+    world = FraudWorld.build(
+        n_experts=8, betas=(0.18, 0.18, 0.02, 0.1, 0.18, 0.05, 0.18, 0.02),
+        client_shift=0.4, seed=2,
+    )
+
+    # live client traffic (the 15-day onboarding window)
+    x_live, _ = world.client.sample(n_live)
+    agg_live = world.ensemble_aggregated(ENSEMBLE, x_live)
+
+    # --- predictor raw: no T^Q
+    res_raw = bin_relative_error(agg_live, world.ref_quantiles, n_bins=10)
+
+    # --- predictor v0: cold-start default transformation (training prior)
+    qm_v0 = world.coldstart_quantile_map(ENSEMBLE, n_trials=2)
+    scores_v0 = np.asarray(qm_v0(jnp.asarray(agg_live, jnp.float32)))
+    res_v0 = bin_relative_error(scores_v0, world.ref_quantiles, n_bins=10)
+
+    # --- predictor v1: custom transformation fit on the first half of live
+    # traffic, evaluated on the second half (the paper's week-before /
+    # week-after protocol)
+    half = n_live // 2
+    qm_v1 = world.custom_quantile_map(ENSEMBLE, x_live[:half])
+    scores_v1 = np.asarray(qm_v1(jnp.asarray(agg_live[half:], jnp.float32)))
+    res_v1 = bin_relative_error(scores_v1, world.ref_quantiles, n_bins=10)
+
+    def _errs(res):
+        return [None if np.isnan(v) else float(v) for v in res["rel_err"]]
+
+    # paper-claim scalars
+    raw_first_bin = float(res_raw["observed"][0])
+    v0_max_high_bin = float(np.nanmax(np.abs(res_v0["rel_err"][5:])))
+    v1_max_high_bin = float(np.nanmax(np.abs(res_v1["rel_err"][5:8])))
+    return {
+        "bins": [f"[{i/10:.1f},{(i+1)/10:.1f})" for i in range(10)],
+        "raw": _errs(res_raw),
+        "v0": _errs(res_v0),
+        "v1": _errs(res_v1),
+        "raw_mass_in_first_bin": raw_first_bin,
+        "v0_max_abs_rel_err_high_bins": v0_max_high_bin,
+        "v1_max_abs_rel_err_mid_bins": v1_max_high_bin,
+    }
+
+
+def main() -> None:
+    res = run()
+    print(f"{'bin':<12} {'raw %':>10} {'v0 (default) %':>15} {'v1 (custom) %':>15}")
+    for i, b in enumerate(res["bins"]):
+        def fmt(v):
+            return f"{100*v:10.1f}" if v is not None else "       nan"
+        print(f"{b:<12} {fmt(res['raw'][i])} {fmt(res['v0'][i]):>15} "
+              f"{fmt(res['v1'][i]):>15}")
+    print(f"\nraw: {100*res['raw_mass_in_first_bin']:.1f}% of scores in [0,0.1) "
+          "(paper: 100%, 43% rel err)")
+    print(f"v0 max |rel err| in bins >=0.5: {100*res['v0_max_abs_rel_err_high_bins']:.0f}% "
+          "(paper: up to 1691%)")
+    print(f"v1 max |rel err| in bins [0.5,0.8): {100*res['v1_max_abs_rel_err_mid_bins']:.1f}% "
+          "(paper: 7.1-11%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Fig. 6 reproduction: live model update {m1,m2} -> {m1,m2,m3}.
+
+  p1   — old ensemble {m1,m2} with its custom T^Q_v1 (aligned);
+  p1.5 — new ensemble {m1,m2,m3} with the OLD T^Q_v1 (hypothetical:
+         transformation not refreshed — misaligned, under-alerting);
+  p2   — new ensemble with refreshed T^Q_v2 (aligned again).
+
+Also checks the paper's Sec.-3.2 claims: recall@1%FPR identical between
+p1.5 and p2 (quantile map is monotone), and p2 >= p1 (new expert adds
+discriminative power for the shifted fraud pattern m3 was trained on).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import bin_relative_error, recall_at_fpr
+from repro.experiments.fraud_world import FraudWorld
+from repro.training.data import FraudEventStream, TenantProfile
+from repro.experiments.fraud_world import train_expert
+
+
+def run(quick: bool = False) -> dict:
+    n_live = 120_000 if quick else 400_000
+    world = FraudWorld.build(n_experts=2, betas=(0.18, 0.18),
+                             client_shift=0.3, seed=3)
+    # This client sees the SAME fraud pattern family as the training pool
+    # (same generative direction) with a moderate covariate shift, so the
+    # legacy experts retain most of their signal — the paper's setting where
+    # the update brings an incremental (+1.1pp) recall gain.
+    world.client = FraudEventStream(
+        TenantProfile("train-pool", fraud_rate=0.008, feature_shift=0.35,
+                      seed=9000)
+    )
+    # m3: new expert trained on the client's current distribution at
+    # aggressive undersampling (beta = 2%) — the paper's new fraud pattern
+    # specialist.
+    recent = FraudEventStream(
+        TenantProfile("train-pool", fraud_rate=0.01, feature_shift=0.35,
+                      seed=303)
+    )
+    world.experts["m3"] = train_expert(recent, "m3", 0.02, mask_seed=33)
+
+    old, new = ("m1", "m2"), ("m1", "m2", "m3")
+
+    x_pre, y_pre = world.client.sample(n_live)     # pre-deployment period
+    x_post, y_post = world.client.sample(n_live)   # post-deployment period
+
+    # p1: old ensemble + its custom transformation (fit pre-deployment)
+    qm_v1 = world.custom_quantile_map(old, x_pre)
+    agg_old_pre = world.ensemble_aggregated(old, x_pre)
+    p1_scores = np.asarray(qm_v1(jnp.asarray(agg_old_pre, jnp.float32)))
+    res_p1 = bin_relative_error(p1_scores, world.ref_quantiles, n_bins=10)
+
+    # p1.5: NEW ensemble + OLD transformation, post-deployment
+    agg_new_post = world.ensemble_aggregated(new, x_post)
+    p15_scores = np.asarray(qm_v1(jnp.asarray(agg_new_post, jnp.float32)))
+    res_p15 = bin_relative_error(p15_scores, world.ref_quantiles, n_bins=10)
+
+    # p2: NEW ensemble + refreshed transformation (fit on recent data)
+    qm_v2 = world.custom_quantile_map(new, x_post)
+    p2_scores = np.asarray(qm_v2(jnp.asarray(agg_new_post, jnp.float32)))
+    res_p2 = bin_relative_error(p2_scores, world.ref_quantiles, n_bins=10)
+
+    # Sec.-3.2 claims
+    r_p1 = recall_at_fpr(p1_scores, y_pre, 0.01)
+    r_p15 = recall_at_fpr(p15_scores, y_post, 0.01)
+    r_p2 = recall_at_fpr(p2_scores, y_post, 0.01)
+
+    def _errs(res):
+        return [None if np.isnan(v) else float(v) for v in res["rel_err"]]
+
+    return {
+        "bins": [f"[{i/10:.1f},{(i+1)/10:.1f})" for i in range(10)],
+        "p1": _errs(res_p1), "p1.5": _errs(res_p15), "p2": _errs(res_p2),
+        "recall_p1": r_p1, "recall_p1.5": r_p15, "recall_p2": r_p2,
+        "recall_gain_pct_points": 100.0 * (r_p2 - r_p1),
+        "p15_max_abs_err": float(np.nanmax(np.abs(res_p15["rel_err"]))),
+        "p2_max_abs_err": float(np.nanmax(np.abs(res_p2["rel_err"][:8]))),
+    }
+
+
+def main() -> None:
+    res = run()
+    print(f"{'bin':<12} {'p1 %':>9} {'p1.5 %':>9} {'p2 %':>9}")
+    for i, b in enumerate(res["bins"]):
+        def fmt(v):
+            return f"{100*v:9.1f}" if v is not None else "      nan"
+        print(f"{b:<12} {fmt(res['p1'][i])} {fmt(res['p1.5'][i])} {fmt(res['p2'][i])}")
+    print(f"\nrecall@1%FPR: p1={res['recall_p1']:.4f}  "
+          f"p1.5={res['recall_p1.5']:.4f}  p2={res['recall_p2']:.4f}")
+    print(f"p1.5 == p2 recall (monotone T^Q): "
+          f"{abs(res['recall_p1.5'] - res['recall_p2']) < 1e-9}")
+    print(f"p2 - p1 recall gain: {res['recall_gain_pct_points']:+.2f} pct points "
+          "(paper: +1.1)")
+
+
+if __name__ == "__main__":
+    main()

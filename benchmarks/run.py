@@ -1,0 +1,101 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract, one
+row per headline metric of each benchmark, then a human-readable summary.
+
+  python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _csv(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sample sizes (CI mode)")
+    args = ap.parse_args()
+    quick = args.quick
+
+    print("name,us_per_call,derived")
+    t_all = time.perf_counter()
+
+    # ---- Table 1: expert calibration --------------------------------------
+    t0 = time.perf_counter()
+    from benchmarks import bench_table1_calibration
+    r = bench_table1_calibration.run(quick=quick)
+    dt = (time.perf_counter() - t0) * 1e6
+    _csv("table1_calibration", dt,
+         f"mean_expert_ece_change_pct={r['mean_expert_ece_change_pct']:.1f};"
+         f"ensemble_ece_change_pct={r['ensemble_ece_change_pct']:.1f};"
+         f"paper=-80_to_-98_and_-90.8")
+
+    # ---- Fig. 4: quantile transformation update ---------------------------
+    t0 = time.perf_counter()
+    from benchmarks import bench_fig4_quantile_update
+    r = bench_fig4_quantile_update.run(quick=quick)
+    dt = (time.perf_counter() - t0) * 1e6
+    _csv("fig4_quantile_update", dt,
+         f"raw_mass_first_bin={r['raw_mass_in_first_bin']:.3f};"
+         f"v0_max_high_bin_err={r['v0_max_abs_rel_err_high_bins']:.2f};"
+         f"v1_max_mid_bin_err={r['v1_max_abs_rel_err_mid_bins']:.3f}")
+
+    # ---- Fig. 6: live model update -----------------------------------------
+    t0 = time.perf_counter()
+    from benchmarks import bench_fig6_model_update
+    r = bench_fig6_model_update.run(quick=quick)
+    dt = (time.perf_counter() - t0) * 1e6
+    _csv("fig6_model_update", dt,
+         f"recall_p1={r['recall_p1']:.4f};recall_p2={r['recall_p2']:.4f};"
+         f"monotone_recall_invariant={abs(r['recall_p1.5'] - r['recall_p2']) < 1e-9};"
+         f"p15_max_err={r['p15_max_abs_err']:.2f};p2_max_err={r['p2_max_abs_err']:.2f}")
+
+    # ---- Fig. 5: rollout stability -----------------------------------------
+    t0 = time.perf_counter()
+    from benchmarks import bench_fig5_rollout
+    r = bench_fig5_rollout.run(quick=quick)
+    dt = (time.perf_counter() - t0) * 1e6
+    _csv("fig5_rollout", dt,
+         f"pod_peak={r['pod_peak']};min_ready={r['min_ready']};"
+         f"p99_latency_ms={r['latency_p99_ms']:.2f};"
+         f"final_version={r['final_version']}")
+
+    # ---- Appendix A: sample-size bound -------------------------------------
+    t0 = time.perf_counter()
+    from benchmarks import bench_appendix_a
+    r = bench_appendix_a.run(quick=quick)
+    dt = (time.perf_counter() - t0) * 1e6
+    worst = min(row["coverage_at_n"] for row in r["rows"])
+    _csv("appendix_a_samplesize", dt,
+         f"worst_coverage_at_n={worst:.3f};nominal=0.95;"
+         f"rows={len(r['rows'])}")
+
+    # ---- serving latency/throughput ----------------------------------------
+    t0 = time.perf_counter()
+    from benchmarks import bench_serving_latency
+    r = bench_serving_latency.run(quick=quick)
+    dt = (time.perf_counter() - t0) * 1e6
+    _csv("serving_latency", r["batch_1"]["latency_ms"] * 1e3,
+         f"events_per_s_b256={r['batch_256']['events_per_s']:.0f};"
+         f"transform_share_pct={r['transform_share_of_path_pct']:.2f}")
+
+    # ---- kernels -------------------------------------------------------------
+    t0 = time.perf_counter()
+    from benchmarks import bench_kernels
+    r = bench_kernels.run(quick=quick)
+    for name, row in r.items():
+        _csv(f"kernel_{name}", row["us_per_call"],
+             f"allclose={row.get('kernel_allclose', True)}")
+
+    print(f"\n# total bench time: {time.perf_counter() - t_all:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""End-to-end serving driver (the paper's kind: Score-as-a-Service).
+
+Serves REAL transformer experts (reduced same-family configs from the
+assigned pool) behind the full MUSE stack with batched requests:
+
+  token events -> intent routing -> predictor (2-transformer ensemble,
+  T^C -> A -> T^Q) -> business-ready scores,  with shadow scoring of a
+  candidate 3-model ensemble, streaming quantile tracking, an Eq.-5
+  readiness gate, and a live calibration refresh — the full model
+  lifecycle of Fig. 3, no client changes anywhere.
+
+  PYTHONPATH=src python examples/serve_e2e.py [--batches 30] [--batch 32]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.routing import Condition, Intent, RoutingTable, ScoringRule, ShadowRule
+from repro.core.predictor import PredictorSpec
+from repro.core.transforms import QuantileMap, fraud_reference_quantiles
+from repro.models.model import Model
+from repro.serving.server import MuseServer, ServerConfig
+from repro.serving.types import ScoringRequest
+
+
+def make_transformer_expert(arch: str, seed: int, seq_len: int = 32):
+    """A real transformer with a risk-score head, jit-compiled for serving.
+
+    Features arriving from the client are hashed into token ids — the
+    'schema' of this toy deployment.
+    """
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(seed))
+
+    @jax.jit
+    def scorer(tokens):
+        out = model.forward(params, tokens=tokens, logits_mode="last")
+        return out.risk_score
+
+    vocab = cfg.vocab_size
+
+    def score_fn(features):
+        feats = np.asarray(features, np.float32)
+        tokens = (np.abs(feats[..., :seq_len] * 1000).astype(np.int64) % vocab)
+        if tokens.shape[-1] < seq_len:
+            tokens = np.pad(tokens, ((0, 0), (0, seq_len - tokens.shape[-1])))
+        return scorer(jnp.asarray(tokens, jnp.int32))
+
+    return score_fn, cfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+
+    dim = 32
+    ref_q = fraud_reference_quantiles(128)
+    qm0 = QuantileMap(jnp.linspace(0, 1, 128), ref_q)
+
+    table = RoutingTable(
+        scoring_rules=(
+            ScoringRule(Condition(tenants=("bank1",)), "bank1-ensemble-v1"),
+            ScoringRule(Condition(), "global-v1"),
+        ),
+        shadow_rules=(
+            ShadowRule(Condition(tenants=("bank1",)), ("bank1-ensemble-v2",)),
+        ),
+        version="v1",
+    )
+    server = MuseServer(table, ServerConfig(
+        refresh_alert_rate=0.05, refresh_rel_error=0.5))
+
+    factories = {
+        "internlm2-expert": lambda: make_transformer_expert("internlm2-1.8b", 0)[0],
+        "qwen3-expert": lambda: make_transformer_expert("qwen3-8b", 1)[0],
+        "olmoe-expert": lambda: make_transformer_expert("olmoe-1b-7b", 2)[0],
+    }
+    t0 = time.perf_counter()
+    server.deploy(PredictorSpec(
+        "bank1-ensemble-v1", ("internlm2-expert", "qwen3-expert"),
+        betas=(0.18, 0.18), weights=(1.0, 1.0), quantile_map=qm0,
+    ), factories)
+    server.deploy(PredictorSpec.single("global-v1", "internlm2-expert", qm0),
+                  factories)
+    # candidate: adds an MoE expert — dedup provisions only the new model
+    server.deploy(PredictorSpec(
+        "bank1-ensemble-v2",
+        ("internlm2-expert", "qwen3-expert", "olmoe-expert"),
+        betas=(0.18, 0.18, 0.02), weights=(1.0, 1.0, 1.0), quantile_map=qm0,
+    ), factories)
+    print(f"deployed 3 predictors over {server.pool.provision_events} physical "
+          f"models in {time.perf_counter() - t0:.1f}s "
+          "(ensemble-v2 provisioned only the MoE expert)")
+
+    from repro.serving.warmup import warm_up
+    t0 = time.perf_counter()
+    # warm every batch shape the tenant-grouping can produce (the paper's
+    # point: a replica must never compile on live traffic)
+    warm_up(server, dim, batch_sizes=(1, args.batch // 4, args.batch // 2,
+                                      args.batch))
+    print(f"warm-up (XLA compile of every predictor at serving shapes): "
+          f"{time.perf_counter() - t0:.1f}s")
+
+    rng = np.random.default_rng(0)
+    tenants = ["bank1", "bank1", "bank2", "fintechX"]
+    lat = []
+    t0 = time.perf_counter()
+    for i in range(args.batches):
+        reqs = [
+            ScoringRequest(
+                intent=Intent(tenant=tenants[j % len(tenants)]),
+                features=rng.normal(0, 1, dim).astype(np.float32),
+            )
+            for j in range(args.batch)
+        ]
+        t1 = time.perf_counter()
+        resps = server.score_batch(reqs)
+        lat.append((time.perf_counter() - t1) * 1e3)
+        assert all(0.0 <= r.score <= 1.0 for r in resps)
+    total = args.batches * args.batch
+    dt = time.perf_counter() - t0
+    print(f"served {total} events in {dt:.2f}s "
+          f"({total / dt:.0f} events/s); latency p50={np.percentile(lat, 50):.1f}ms "
+          f"p99={np.percentile(lat, 99):.1f}ms per batch of {args.batch}")
+    print(f"shadow evaluations recorded: {len(server.sink)} "
+          f"(candidate ensemble scored on live bank1 traffic)")
+
+    # calibration refresh once the Eq.-5 gate opens
+    ready = server.calibration_ready("bank1", "bank1-ensemble-v1")
+    print(f"calibration refresh gate (Eq. 5) open: {ready}")
+    if ready:
+        qm1 = server.fit_custom_quantile_map("bank1", "bank1-ensemble-v1",
+                                             np.asarray(ref_q))
+        server.swap_transformation("bank1-ensemble-v1", qm1)
+        r = server.score(ScoringRequest(
+            intent=Intent(tenant="bank1"),
+            features=rng.normal(0, 1, dim).astype(np.float32)))
+        print(f"after live T^Q refresh: score={r.score:.4f} via {r.predictor}")
+
+    # promote the shadow candidate — pure routing change
+    server.publish_routing(server.routing.with_rule_update(
+        "bank1-ensemble-v1", "bank1-ensemble-v2", "v2"))
+    r = server.score(ScoringRequest(
+        intent=Intent(tenant="bank1"),
+        features=rng.normal(0, 1, dim).astype(np.float32)))
+    print(f"after promotion: bank1 served by {r.predictor} "
+          f"(routing {r.routing_version}) — client unchanged")
+
+
+if __name__ == "__main__":
+    main()

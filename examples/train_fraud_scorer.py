@@ -1,0 +1,70 @@
+"""Training driver: train a transformer risk-scorer end to end on CPU.
+
+Trains a reduced-family architecture from the assigned pool (selectable via
+--arch) on the synthetic token stream with the full substrate: AdamW +
+cosine schedule, remat, checkpointing, resume. Defaults are sized for
+minutes on CPU; --layers/--d-model scale it up (the same code lowers onto
+the 256-chip mesh via repro.launch.train semantics).
+
+  PYTHONPATH=src python examples/train_fraud_scorer.py --steps 200
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.model import Model
+from repro.training.checkpoint import latest_step, restore_checkpoint
+from repro.training.data import TokenStream
+from repro.training.optimizer import AdamW, cosine_schedule
+from repro.training.train import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--layers", type=int, default=0, help="override depth")
+    ap.add_argument("--d-model", type=int, default=0, help="override width")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    overrides = {}
+    if args.layers:
+        overrides["n_layers"] = args.layers
+    if args.d_model:
+        overrides["d_model"] = args.d_model
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = Model(cfg)
+    print(f"arch={cfg.name}  params~{cfg.param_count()/1e6:.1f}M  "
+          f"steps={args.steps}")
+
+    opt = AdamW(learning_rate=cosine_schedule(args.lr, warmup_steps=20,
+                                              total_steps=args.steps))
+    trainer = Trainer(model, opt, remat=True, compute_dtype=jnp.float32,
+                      checkpoint_dir=args.ckpt_dir,
+                      checkpoint_every=max(args.steps // 2, 1))
+    state = trainer.init_state(jax.random.key(0))
+
+    resume = latest_step(args.ckpt_dir)
+    if resume:
+        state = state._replace(params=restore_checkpoint(
+            args.ckpt_dir, resume, state.params))
+        print(f"resumed params from checkpoint step {resume}")
+
+    stream = iter(TokenStream(cfg.vocab_size, args.seq, args.batch))
+    state, history = trainer.fit(state, stream, num_steps=args.steps,
+                                 log_every=max(args.steps // 10, 1))
+    print(f"\nloss {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f} "
+          f"({history[-1]['elapsed_s']:.0f}s); checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

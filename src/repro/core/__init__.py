@@ -1,0 +1,30 @@
+"""MUSE core: the paper's primary contribution as composable JAX modules.
+
+Sub-modules:
+  transforms  — T^C (posterior correction), A (aggregation), T^Q (quantile map)
+  coldstart   — Beta-mixture default transformation (Sec. 2.4)
+  quantiles   — quantile estimation + Appendix-A sample-size bound
+  predictor   — the p = <M, A, T^Q> abstraction (Eq. 2)
+  routing     — intent-based routing tables (Sec. 2.5)
+  registry    — deduplicated model pool (Sec. 2.2.1)
+  metrics     — ECE_SWEEP^EM, Brier, recall@FPR, Wilson intervals
+"""
+from repro.core.transforms import (
+    Aggregation,
+    PosteriorCorrection,
+    QuantileMap,
+    posterior_correction,
+    quantile_map,
+    score_pipeline,
+)
+from repro.core.predictor import Predictor, PredictorSpec, TransformPipeline, deploy_predictor
+from repro.core.routing import Condition, Intent, Resolution, RoutingTable, ScoringRule, ShadowRule
+from repro.core.registry import ModelPool
+
+__all__ = [
+    "Aggregation", "PosteriorCorrection", "QuantileMap",
+    "posterior_correction", "quantile_map", "score_pipeline",
+    "Predictor", "PredictorSpec", "TransformPipeline", "deploy_predictor",
+    "Condition", "Intent", "Resolution", "RoutingTable", "ScoringRule", "ShadowRule",
+    "ModelPool",
+]

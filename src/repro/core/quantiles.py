@@ -1,0 +1,99 @@
+"""Quantile estimation machinery + the Appendix-A sample-size bound.
+
+Two estimation paths:
+  * Offline batch fit (``np.quantile``) — used when enough history exists.
+  * Streaming reservoir estimator — the serving layer feeds live scores into
+    it per (tenant, predictor) pair; once ``required_sample_size`` is met the
+    control plane can trigger a transformation refresh (the paper's
+    "Automated Calibration Refresh" roadmap item, implemented here).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def required_sample_size(alert_rate: float, rel_error: float, z: float = 1.96) -> int:
+    """Eq. 5 / Eq. 14: ``n = z^2 (1-a) / (delta^2 a)``.
+
+    Minimum number of unlabeled score samples so the realized alert rate at
+    the fitted threshold deviates from the target ``a`` by at most ``delta``
+    (relative), with confidence given by z (1.96 -> 95%).
+    """
+    if not 0.0 < alert_rate < 1.0:
+        raise ValueError(f"alert_rate must be in (0,1), got {alert_rate}")
+    if rel_error <= 0.0:
+        raise ValueError(f"rel_error must be > 0, got {rel_error}")
+    return int(np.ceil(z * z * (1.0 - alert_rate) / (rel_error * rel_error * alert_rate)))
+
+
+def alert_rate_rel_error(alert_rate: float, n: int, z: float = 1.96) -> float:
+    """Inverse of Eq. 5: achievable relative error for a given sample budget."""
+    return float(z * np.sqrt((1.0 - alert_rate) / (n * alert_rate)))
+
+
+@dataclasses.dataclass
+class StreamingQuantileEstimator:
+    """Fixed-size uniform reservoir over a score stream.
+
+    Simple, unbiased, and adequate at MUSE scale: the Appendix-A bound for
+    a=0.1% alert rate at delta=20% needs ~96k samples, which a 128k reservoir
+    holds exactly until overflow, after which uniform reservoir sampling keeps
+    an unbiased subsample.  (P2/t-digest would use less memory; a reservoir is
+    exact for the bins we need and trivially correct.)
+    """
+
+    capacity: int = 131072
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self._buf = np.empty((self.capacity,), dtype=np.float64)
+        self._seen = 0
+        self._rng = np.random.default_rng(self.seed)
+
+    @property
+    def count(self) -> int:
+        return self._seen
+
+    def update(self, scores: np.ndarray) -> None:
+        scores = np.asarray(scores, dtype=np.float64).ravel()
+        for chunk in np.array_split(scores, max(1, len(scores) // 65536)):
+            self._update_chunk(chunk)
+
+    def _update_chunk(self, scores: np.ndarray) -> None:
+        k = len(scores)
+        if k == 0:
+            return
+        fill = min(self.capacity - min(self._seen, self.capacity), k)
+        if fill > 0:
+            start = self._seen
+            self._buf[start : start + fill] = scores[:fill]
+        rest = scores[fill:]
+        if len(rest) > 0:
+            # Vectorized reservoir: each element replaces a random slot with
+            # probability capacity / (index seen so far).
+            idx = self._seen + fill + np.arange(len(rest), dtype=np.int64) + 1
+            accept = self._rng.random(len(rest)) < (self.capacity / idx)
+            slots = self._rng.integers(0, self.capacity, size=len(rest))
+            sel = np.flatnonzero(accept)
+            self._buf[slots[sel]] = rest[sel]
+        self._seen += k
+
+    def quantiles(self, levels: np.ndarray) -> np.ndarray:
+        if self._seen == 0:
+            raise ValueError("no samples observed")
+        data = self._buf[: min(self._seen, self.capacity)]
+        q = np.quantile(data, np.asarray(levels))
+        return np.maximum.accumulate(q)
+
+    def ready(self, alert_rate: float, rel_error: float, z: float = 1.96) -> bool:
+        """Has this stream accumulated enough events for a trustworthy T^Q?"""
+        return self._seen >= required_sample_size(alert_rate, rel_error, z)
+
+
+def batch_quantiles(scores: np.ndarray, n_levels: int) -> tuple[np.ndarray, np.ndarray]:
+    """Offline fit: (levels, quantiles) with monotonicity enforced."""
+    levels = np.linspace(0.0, 1.0, n_levels)
+    q = np.quantile(np.asarray(scores, dtype=np.float64), levels)
+    return levels, np.maximum.accumulate(q)

@@ -1,0 +1,236 @@
+"""Composable score transformations (paper Sec. 2.3).
+
+Three transformation nodes compose a predictor's post-model DAG:
+
+  * :class:`PosteriorCorrection`  — ``T^C`` (Eq. 3), undoes undersampling bias.
+  * :class:`Aggregation`          — ``A``, weighted average of calibrated experts.
+  * :class:`QuantileMap`          — ``T^Q`` (Eq. 4), piecewise-linear CDF alignment.
+
+All transforms are pure pytrees of arrays + static metadata so they can live
+inside jitted serving steps, be donated, swapped (the paper's "seamless model
+update" = replacing these pytrees under a stable routing intent), and sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Posterior Correction (Eq. 3)
+# ---------------------------------------------------------------------------
+
+def posterior_correction(scores: Array, beta: Array | float) -> Array:
+    """Eq. 3: ``T^C(y) = beta*y / (1 - (1-beta)*y)``.
+
+    ``beta`` is the undersampling ratio of the majority (negative) class used
+    when training the expert: ``beta = P(keep negative sample)``.  Scores are
+    posterior probabilities in [0, 1].  The map is monotone, fixes 0 and 1,
+    and is the exact analytical inverse of the prior shift introduced by
+    undersampling (Dal Pozzolo et al., 2015).
+    """
+    scores = jnp.asarray(scores)
+    beta = jnp.asarray(beta, dtype=scores.dtype)
+    return (beta * scores) / (1.0 - (1.0 - beta) * scores)
+
+
+def posterior_correction_inverse(corrected: Array, beta: Array | float) -> Array:
+    """Inverse of Eq. 3 — maps a true posterior back to the biased score.
+
+    Used by the synthetic data pipeline to *induce* undersampling bias with a
+    known ground truth, and in tests as the round-trip oracle.
+    """
+    corrected = jnp.asarray(corrected)
+    beta = jnp.asarray(beta, dtype=corrected.dtype)
+    return corrected / (beta + (1.0 - beta) * corrected)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PosteriorCorrection:
+    """Per-expert ``T^C_k`` node: carries the training undersampling ratio."""
+
+    beta: Array  # scalar (or broadcastable) undersampling ratio in (0, 1]
+
+    def __call__(self, scores: Array) -> Array:
+        return posterior_correction(scores, self.beta)
+
+    @staticmethod
+    def identity() -> "PosteriorCorrection":
+        # beta = 1.0 means "no undersampling" -> T^C is the identity map.
+        return PosteriorCorrection(beta=jnp.float32(1.0))
+
+
+# ---------------------------------------------------------------------------
+# Ensemble aggregation (Sec. 2.3.2)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Aggregation:
+    """Weighted-average aggregation ``A`` over K calibrated expert scores.
+
+    Weights are normalized at call time so that updating them (the paper's
+    "lightweight model adaptation") never needs renormalization bookkeeping.
+    """
+
+    weights: Array  # (K,)
+
+    def __call__(self, expert_scores: Array) -> Array:
+        """``expert_scores``: (..., K) -> (...)."""
+        w = self.weights / jnp.sum(self.weights)
+        return jnp.einsum("...k,k->...", expert_scores, w)
+
+    @staticmethod
+    def uniform(k: int) -> "Aggregation":
+        return Aggregation(weights=jnp.ones((k,), dtype=jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Quantile Mapping (Eq. 4)
+# ---------------------------------------------------------------------------
+
+def _searchsorted_branchless(table: Array, values: Array) -> Array:
+    """TPU-friendly bucket search: index i s.t. table[i] <= v < table[i+1].
+
+    The paper computes this with an O(log N) binary search on CPU.  On TPU a
+    data-dependent branchy search is hostile to the VPU; an N-wide broadcast
+    compare-and-sum is a handful of vector ops and keeps everything dense.
+    Clamps to [0, N-2] so interpolation always has a right neighbour.
+    """
+    n = table.shape[-1]
+    # sum over the table axis of (v >= q_i) gives #quantiles <= v; -1 -> index.
+    idx = jnp.sum(values[..., None] >= table, axis=-1) - 1
+    return jnp.clip(idx, 0, n - 2)
+
+
+def quantile_map(
+    scores: Array,
+    src_quantiles: Array,
+    ref_quantiles: Array,
+) -> Array:
+    """Eq. 4: piecewise-linear map aligning CDF of S onto CDF of R.
+
+    ``src_quantiles``/``ref_quantiles``: (N,) monotone non-decreasing arrays of
+    matched quantiles q^S_i, q^R_i (same quantile levels).  The map is monotone
+    (non-decreasing), hence rank/ROC preserving — the paper's key invariant.
+    Values outside [q^S_1, q^S_N] are linearly extended from the edge segment
+    and clipped to the reference support.
+    """
+    scores = jnp.asarray(scores)
+    dtype = scores.dtype
+    qs = src_quantiles.astype(dtype)
+    qr = ref_quantiles.astype(dtype)
+    i = _searchsorted_branchless(qs, scores)
+    q_s_i = jnp.take(qs, i)
+    q_s_n = jnp.take(qs, i + 1)
+    q_r_i = jnp.take(qr, i)
+    q_r_n = jnp.take(qr, i + 1)
+    # Guard degenerate (flat) source segments.
+    denom = jnp.where(q_s_n - q_s_i > 0, q_s_n - q_s_i, jnp.asarray(1.0, dtype))
+    slope = (q_r_n - q_r_i) / denom
+    out = q_r_i + (scores - q_s_i) * slope
+    return jnp.clip(out, qr[0], qr[-1])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantileMap:
+    """``T^Q`` node: tenant-specific source quantiles -> shared reference."""
+
+    src_quantiles: Array  # (N,)
+    ref_quantiles: Array  # (N,)
+
+    def __call__(self, scores: Array) -> Array:
+        return quantile_map(scores, self.src_quantiles, self.ref_quantiles)
+
+    @property
+    def num_quantiles(self) -> int:
+        return self.src_quantiles.shape[-1]
+
+    @staticmethod
+    def identity(n: int = 64) -> "QuantileMap":
+        q = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+        return QuantileMap(src_quantiles=q, ref_quantiles=q)
+
+    @staticmethod
+    def fit(
+        source_scores: np.ndarray | Array,
+        ref_quantiles: Array,
+        levels: np.ndarray | None = None,
+    ) -> "QuantileMap":
+        """Fit tenant-specific source quantiles from (unlabeled!) scores.
+
+        This is the offline fitting path (Sec. 2.3.3): needs only raw score
+        samples, no labels.  ``ref_quantiles`` must be evaluated at the same
+        quantile ``levels`` (default: uniform grid of len(ref_quantiles)).
+        """
+        ref_q = np.asarray(ref_quantiles, dtype=np.float64)
+        n = ref_q.shape[-1]
+        if levels is None:
+            levels = np.linspace(0.0, 1.0, n)
+        src = np.quantile(np.asarray(source_scores, dtype=np.float64), levels)
+        src = np.maximum.accumulate(src)  # enforce monotone vs fp jitter
+        return QuantileMap(
+            src_quantiles=jnp.asarray(src, dtype=jnp.float32),
+            ref_quantiles=jnp.asarray(ref_q, dtype=jnp.float32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Reference distributions (Sec. 2.3.3 / Sec. 7 of DESIGN.md)
+# ---------------------------------------------------------------------------
+
+def fraud_reference_quantiles(n: int = 256, *, a: float = 0.8, b: float = 8.0,
+                              tail_w: float = 0.02, tail_a: float = 6.0,
+                              tail_b: float = 1.5) -> Array:
+    """A configurable reference distribution R with high density near 0 and a
+    long tail toward 1 (the paper's guidance for imbalanced fraud settings:
+    more resolution in the 0.1%–1% alert-rate region).
+
+    Mixture: (1-tail_w)·Beta(a, b) + tail_w·Beta(tail_a, tail_b).
+    Returns its quantiles on a uniform level grid, via numerical CDF inversion.
+    """
+    from scipy import stats  # offline path only
+
+    levels = np.linspace(0.0, 1.0, n)
+    grid = np.linspace(0.0, 1.0, 65537)
+    cdf = (1.0 - tail_w) * stats.beta.cdf(grid, a, b) + tail_w * stats.beta.cdf(
+        grid, tail_a, tail_b
+    )
+    q = np.interp(levels, cdf, grid)
+    q = np.maximum.accumulate(q)
+    return jnp.asarray(q, dtype=jnp.float32)
+
+
+def uniform_reference_quantiles(n: int = 256) -> Array:
+    return jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Full Eq. 2 pipeline (reference composition; fused kernel in kernels/)
+# ---------------------------------------------------------------------------
+
+def score_pipeline(
+    expert_scores: Array,
+    betas: Array,
+    weights: Array,
+    src_quantiles: Array,
+    ref_quantiles: Array,
+) -> Array:
+    """Eq. 2 end-to-end: ``T^Q(A([T^C_k(m_k(x))]))``.
+
+    ``expert_scores``: (..., K) raw scores from the K experts.
+    Pure-jnp composition; ``kernels/score_pipeline.py`` provides the fused
+    Pallas version with identical semantics (this function is its oracle).
+    """
+    corrected = posterior_correction(expert_scores, betas)
+    w = weights / jnp.sum(weights)
+    agg = jnp.einsum("...k,k->...", corrected, w)
+    return quantile_map(agg, src_quantiles, ref_quantiles)

@@ -1,0 +1,58 @@
+"""Jit'd public entry points for the Pallas kernels.
+
+On this CPU container every kernel runs in ``interpret=True`` (the Pallas
+interpreter executes the kernel body exactly); on TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quantile_map as _qm
+from repro.kernels import score_pipeline as _sp
+
+Array = jax.Array
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def quantile_map(scores: Array, src_quantiles: Array, ref_quantiles: Array,
+                 *, block: int = _qm.DEFAULT_BLOCK,
+                 interpret: bool | None = None) -> Array:
+    return _qm.quantile_map(
+        scores, src_quantiles, ref_quantiles, block=block,
+        interpret=_INTERPRET if interpret is None else interpret,
+    )
+
+
+def score_pipeline(expert_scores: Array, betas: Array, weights: Array,
+                   src_quantiles: Array, ref_quantiles: Array,
+                   *, block: int = _sp.DEFAULT_BLOCK,
+                   interpret: bool | None = None) -> Array:
+    return _sp.score_pipeline(
+        expert_scores, betas, weights, src_quantiles, ref_quantiles,
+        block=block, interpret=_INTERPRET if interpret is None else interpret,
+    )
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    sliding_window: int = 0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None) -> Array:
+    return _fa.flash_attention(
+        q, k, v, causal=causal, sliding_window=sliding_window,
+        block_q=block_q, block_k=block_k,
+        interpret=_INTERPRET if interpret is None else interpret,
+    )
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     valid_len: Array, *, block_s: int = 512,
+                     interpret: bool | None = None) -> Array:
+    return _da.decode_attention(
+        q, k_cache, v_cache, valid_len, block_s=block_s,
+        interpret=_INTERPRET if interpret is None else interpret,
+    )

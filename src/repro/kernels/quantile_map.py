@@ -1,0 +1,77 @@
+"""Pallas TPU kernel for the paper's Quantile Mapping T^Q (Eq. 4).
+
+TPU adaptation (DESIGN.md §2/§6): the paper's O(log N) binary search is a
+branchy scalar loop — poison for the VPU.  Here the quantile tables (N <= 2048
+f32 values) sit in VMEM; the bucket index is a **branchless compare-and-sum**
+(one (BLOCK, N) vector compare + row reduction), and the four table lookups
+(q^S_i, q^S_{i+1}, q^R_i, q^R_{i+1}) become a single one-hot (BLOCK, N) x
+(N, 2) matmul on the MXU — no data-dependent control flow anywhere.
+
+Grid: 1-D over score blocks; tables are broadcast to every grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_BLOCK = 1024
+
+
+def _quantile_map_kernel(scores_ref, src_ref, ref_ref, out_ref):
+    s = scores_ref[...].astype(jnp.float32)          # (BLOCK,)
+    qs = src_ref[...].astype(jnp.float32)            # (N,)
+    qr = ref_ref[...].astype(jnp.float32)            # (N,)
+    n = qs.shape[-1]
+
+    # branchless bucket search: idx = #(q_i <= s) - 1, clipped to [0, N-2]
+    ge = (s[:, None] >= qs[None, :]).astype(jnp.float32)   # (BLOCK, N)
+    idx = jnp.clip(jnp.sum(ge, axis=-1) - 1.0, 0.0, n - 2.0)
+
+    # one-hot gather of the 4 table values as 2 MXU matvecs
+    iota = jax.lax.broadcasted_iota(jnp.float32, (s.shape[0], n), 1)
+    onehot_i = (iota == idx[:, None]).astype(jnp.float32)        # (BLOCK, N)
+    onehot_ip1 = (iota == (idx + 1.0)[:, None]).astype(jnp.float32)
+    tables = jnp.stack([qs, qr], axis=-1)                        # (N, 2)
+    lo = onehot_i @ tables                                       # (BLOCK, 2)
+    hi = onehot_ip1 @ tables
+    q_s_i, q_r_i = lo[:, 0], lo[:, 1]
+    q_s_n, q_r_n = hi[:, 0], hi[:, 1]
+
+    denom = jnp.where(q_s_n - q_s_i > 0, q_s_n - q_s_i, 1.0)
+    out = q_r_i + (s - q_s_i) * (q_r_n - q_r_i) / denom
+    out = jnp.clip(out, qr[0], qr[-1])
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantile_map(scores: Array, src_quantiles: Array, ref_quantiles: Array,
+                 *, block: int = DEFAULT_BLOCK, interpret: bool = True) -> Array:
+    """Flat or batched scores -> mapped scores (same shape/dtype)."""
+    shape = scores.shape
+    flat = scores.reshape(-1)
+    n = flat.shape[0]
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    total = flat.shape[0]
+    nq = src_quantiles.shape[-1]
+
+    out = pl.pallas_call(
+        _quantile_map_kernel,
+        grid=(total // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((nq,), lambda i: (0,)),
+            pl.BlockSpec((nq,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((total,), scores.dtype),
+        interpret=interpret,
+    )(flat, src_quantiles, ref_quantiles)
+    return out[:n].reshape(shape)

@@ -1,0 +1,87 @@
+"""Fused Pallas kernel for the full Eq. 2 post-model pipeline:
+
+    T^Q( A( [T^C_k(y_k)]_k ) )   —  posterior correction -> weighted
+                                     aggregation -> quantile map
+
+One VMEM pass over a (BLOCK, K) score tile instead of K+2 HBM round trips:
+the correction is elementwise, the aggregation a (BLOCK,K)x(K,) matvec, and
+the quantile map reuses the branchless compare-and-sum + one-hot-matmul
+lookup of kernels/quantile_map.py.  This kernel IS the paper's transformation
+DAG as a single fused op — the serving hot path for every scored event.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_BLOCK = 1024
+
+
+def _score_pipeline_kernel(scores_ref, betas_ref, weights_ref, src_ref,
+                           ref_ref, out_ref):
+    y = scores_ref[...].astype(jnp.float32)          # (BLOCK, K)
+    beta = betas_ref[...].astype(jnp.float32)        # (K,)
+    w = weights_ref[...].astype(jnp.float32)         # (K,)
+    qs = src_ref[...].astype(jnp.float32)            # (N,)
+    qr = ref_ref[...].astype(jnp.float32)
+
+    # --- T^C: posterior correction (Eq. 3), elementwise on the VPU
+    corrected = beta[None, :] * y / (1.0 - (1.0 - beta[None, :]) * y)
+
+    # --- A: weighted average (self-normalizing), one matvec
+    w_norm = w / jnp.sum(w)
+    agg = corrected @ w_norm                          # (BLOCK,)
+
+    # --- T^Q: branchless piecewise-linear quantile map (Eq. 4)
+    n = qs.shape[-1]
+    ge = (agg[:, None] >= qs[None, :]).astype(jnp.float32)
+    idx = jnp.clip(jnp.sum(ge, axis=-1) - 1.0, 0.0, n - 2.0)
+    iota = jax.lax.broadcasted_iota(jnp.float32, (agg.shape[0], n), 1)
+    onehot_i = (iota == idx[:, None]).astype(jnp.float32)
+    onehot_ip1 = (iota == (idx + 1.0)[:, None]).astype(jnp.float32)
+    tables = jnp.stack([qs, qr], axis=-1)
+    lo = onehot_i @ tables
+    hi = onehot_ip1 @ tables
+    q_s_i, q_r_i = lo[:, 0], lo[:, 1]
+    q_s_n, q_r_n = hi[:, 0], hi[:, 1]
+    denom = jnp.where(q_s_n - q_s_i > 0, q_s_n - q_s_i, 1.0)
+    out = q_r_i + (agg - q_s_i) * (q_r_n - q_r_i) / denom
+    out_ref[...] = jnp.clip(out, qr[0], qr[-1]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def score_pipeline(expert_scores: Array, betas: Array, weights: Array,
+                   src_quantiles: Array, ref_quantiles: Array,
+                   *, block: int = DEFAULT_BLOCK, interpret: bool = True
+                   ) -> Array:
+    """expert_scores: (..., K) -> (...) business-ready scores."""
+    *batch_shape, k = expert_scores.shape
+    flat = expert_scores.reshape(-1, k)
+    n = flat.shape[0]
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    total = flat.shape[0]
+    nq = src_quantiles.shape[-1]
+
+    out = pl.pallas_call(
+        _score_pipeline_kernel,
+        grid=(total // block,),
+        in_specs=[
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((nq,), lambda i: (0,)),
+            pl.BlockSpec((nq,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((total,), expert_scores.dtype),
+        interpret=interpret,
+    )(flat, betas, weights, src_quantiles, ref_quantiles)
+    return out[:n].reshape(batch_shape)

@@ -1,0 +1,184 @@
+"""Structural HLO cost extraction that is correct under `lax.scan`.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once*,
+ignoring trip counts (verified empirically — see EXPERIMENTS.md §Dry-run
+caveats).  Since every layer stack here is a scan, collectives and flops
+inside the loop would be undercounted by n_groups (and inner chunk scans).
+
+This module parses the post-optimization HLO text:
+
+  1. split the module into named computations;
+  2. locate every ``while`` op, resolve its body/condition computations, and
+     read the trip count from the condition's ROOT compare against a constant;
+  3. build per-computation multipliers = product of trip counts along the
+     call chain from ENTRY;
+  4. sum collective-op result bytes weighted by those multipliers.
+
+Shapes in post-SPMD HLO are per-device, so the result is per-device bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]"
+)
+
+# permissive: tuple-typed params contain nested parens, so just require
+# "%name (... -> ... {" on one line
+_COMP_HEADER_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$"
+)
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+)
+
+_CALL_RE = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=|branch_computations=\{)%?([\w.\-]+)"
+)
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^\s]+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+_CONST_RE = re.compile(r"%?([\w.\-]+)\s*=\s*s(?:32|64)\[\]\s+constant\((\d+)\)")
+
+_COMPARE_RE = re.compile(
+    r"ROOT\s+%?[\w.\-]+\s*=\s*pred\[\]\s+compare\(([^)]*)\),\s*direction=(\w+)"
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def split_computations(hlo: str) -> dict[str, str]:
+    """{computation_name: body_text}; crude but robust brace matching."""
+    comps: dict[str, str] = {}
+    lines = hlo.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _COMP_HEADER_RE.match(lines[i].strip())
+        if m and lines[i].rstrip().endswith("{"):
+            name = m.group(1)
+            body = []
+            depth = 1
+            i += 1
+            while i < len(lines) and depth > 0:
+                depth += lines[i].count("{") - lines[i].count("}")
+                body.append(lines[i])
+                i += 1
+            comps[name] = "\n".join(body)
+        else:
+            i += 1
+    return comps
+
+
+def _entry_name(hlo: str, comps: dict[str, str]) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.MULTILINE)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return None
+
+
+def _trip_count(cond_text: str) -> int:
+    """Read the loop bound from the condition's ROOT compare vs a constant."""
+    consts = {name: int(val) for name, val in _CONST_RE.findall(cond_text)}
+    m = _COMPARE_RE.search(cond_text)
+    if m:
+        operands = m.group(1)
+        for name, val in consts.items():
+            if name in operands:
+                return max(val, 1)
+    if consts:
+        return max(consts.values())
+    return 1
+
+
+@dataclasses.dataclass
+class HloCollectives:
+    bytes_by_kind: dict[str, float]
+    count_by_kind: dict[str, float]   # trip-weighted dynamic counts
+    static_count: int
+
+    def weighted_bytes(self, factors: dict[str, float]) -> float:
+        return sum(factors.get(k, 1.0) * v for k, v in self.bytes_by_kind.items())
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def collect_collectives(hlo: str) -> HloCollectives:
+    comps = split_computations(hlo)
+    entry = _entry_name(hlo, comps)
+
+    # per-computation while calls: parent -> [(body, trips)]
+    while_calls: dict[str, list[tuple[str, int]]] = {}
+    # generic calls (fusions/conditionals) carry multiplier 1
+    plain_calls: dict[str, set[str]] = {}
+    for parent, text in comps.items():
+        for cond, body in _WHILE_RE.findall(text):
+            trips = _trip_count(comps.get(cond, ""))
+            while_calls.setdefault(parent, []).append((body, trips))
+        calls = set(_CALL_RE.findall(text))
+        plain_calls[parent] = {c for c in calls if c in comps}
+
+    # multiplier per computation via BFS from entry
+    mult: dict[str, float] = {}
+    if entry is not None:
+        mult[entry] = 1.0
+        frontier = [entry]
+        seen = {entry}
+        while frontier:
+            cur = frontier.pop()
+            m = mult[cur]
+            for body, trips in while_calls.get(cur, ()):
+                mult[body] = max(mult.get(body, 0.0), m * trips)
+                if body not in seen:
+                    seen.add(body)
+                    frontier.append(body)
+            for callee in plain_calls.get(cur, ()):
+                factor = m
+                # avoid double-applying trip counts for bodies already handled
+                if callee not in mult or mult[callee] < factor:
+                    mult[callee] = factor
+                if callee not in seen:
+                    seen.add(callee)
+                    frontier.append(callee)
+
+    bytes_by_kind: dict[str, float] = {}
+    count_by_kind: dict[str, float] = {}
+    static = 0
+    for name, text in comps.items():
+        m = mult.get(name, 1.0)
+        for line in text.splitlines():
+            cm = _COLLECTIVE_RE.match(line)
+            if not cm:
+                continue
+            shape_str, kind, startdone = cm.group(1), cm.group(2), cm.group(3)
+            if startdone == "-done":
+                continue  # paired with -start; don't double count
+            static += 1
+            b = _shape_bytes(shape_str) * m
+            bytes_by_kind[kind] = bytes_by_kind.get(kind, 0.0) + b
+            count_by_kind[kind] = count_by_kind.get(kind, 0.0) + m
+    return HloCollectives(bytes_by_kind, count_by_kind, static)

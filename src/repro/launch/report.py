@@ -1,0 +1,122 @@
+"""Render §Dry-run / §Roofline tables from benchmarks/results/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.report [--pod pod1|pod2] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+ARCH_ORDER = [
+    "internlm2-1.8b", "llama3-405b", "olmoe-1b-7b", "qwen2-vl-7b",
+    "hubert-xlarge", "deepseek-coder-33b", "jamba-1.5-large-398b",
+    "qwen3-8b", "xlstm-1.3b", "llama4-maverick-400b-a17b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(pod: str = "pod1", tag: str = "") -> list[dict]:
+    suffix = f"__{pod}{('_' + tag) if tag else ''}.json"
+    rows = []
+    for path in glob.glob(os.path.join(RESULTS_DIR, f"*{suffix}")):
+        base = os.path.basename(path)
+        if not base.endswith(suffix):
+            continue
+        # exclude tagged variants when untagged requested
+        if not tag and base.count("__") != 2:
+            continue
+        with open(path) as f:
+            rows.append(json.load(f))
+    rows.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]),
+                             SHAPE_ORDER.index(r["shape"])))
+    return rows
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(rows: list[dict], markdown: bool = True) -> str:
+    hdr = ["arch", "shape", "kind", "fsdp", "compute", "memory", "collect",
+           "bottleneck", "MF/HLO", "hbm/chip", "fits16G"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append("  ".join(f"{h:>12}" for h in hdr))
+    for r in rows:
+        rf = r["roofline"]
+        ma = r.get("memory_analysis") or {}
+        steady = (ma.get("argument_bytes") or 0) + (ma.get("output_bytes") or 0) \
+            - (ma.get("alias_bytes") or 0)
+        resident = steady + (ma.get("temp_bytes") or 0)
+        fits = "Y" if resident <= HBM_PER_CHIP else f"N({resident/2**30:.0f}G)"
+        cells = [
+            r["arch"], r["shape"], r["kind"], "Y" if r.get("fsdp") else "n",
+            _fmt_s(rf["compute_s"]), _fmt_s(rf["memory_s"]),
+            _fmt_s(rf["collective_s"]), rf["bottleneck"],
+            f"{rf['useful_flops_ratio']:.2f}",
+            f"{(rf['bytes_per_chip']) / 2**30:.1f}G",
+            fits,
+        ]
+        if markdown:
+            lines.append("| " + " | ".join(str(c) for c in cells) + " |")
+        else:
+            lines.append("  ".join(f"{str(c):>12}" for c in cells))
+    return "\n".join(lines)
+
+
+def dryrun_table(rows: list[dict], markdown: bool = True) -> str:
+    hdr = ["arch", "shape", "mesh", "compile_s", "args/chip", "temp/chip",
+           "coll bytes/chip", "coll ops (dyn)", "dominant collective"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    for r in rows:
+        rf = r["roofline"]
+        ma = r.get("memory_analysis") or {}
+        by_kind = rf.get("collective_bytes_by_kind", {})
+        dom = max(by_kind, key=by_kind.get) if by_kind else "-"
+        counts = rf.get("collective_counts", {})
+        cells = [
+            r["arch"], r["shape"], r["mesh"], f"{r['compile_s']:.1f}",
+            f"{(ma.get('argument_bytes') or 0)/2**30:.2f}G",
+            f"{(ma.get('temp_bytes') or 0)/2**30:.2f}G",
+            f"{rf['collective_bytes_per_chip']:.2e}",
+            f"{sum(counts.values()):.0f}",
+            dom,
+        ]
+        if markdown:
+            lines.append("| " + " | ".join(str(c) for c in cells) + " |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pod", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    rows = load(args.pod, args.tag)
+    if args.table == "roofline":
+        print(roofline_table(rows))
+    else:
+        print(dryrun_table(rows))
+
+
+if __name__ == "__main__":
+    main()

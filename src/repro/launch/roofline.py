@@ -1,0 +1,251 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (deliverable g):
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s          (197 TF bf16, v5e)
+  memory     = HLO_bytes_per_chip / HBM_bw               (819 GB/s)
+  collective = collective_bytes_per_chip / link_bw       (~50 GB/s/link)
+
+``cost_analysis`` runs on the SPMD-partitioned module, so its flops/bytes are
+per-device.  Collective bytes are not in cost_analysis: we parse the
+post-optimization HLO and sum result-shape bytes of every collective op
+(result shapes are per-device post-partitioning).  All-reduce is counted
+twice (reduce-scatter + all-gather phases of a ring); all-to-all / permute /
+gather / scatter once.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from typing import Any
+
+from repro.launch import mesh as mesh_lib
+
+# ring all-reduce moves ~2x the payload (reduce-scatter + all-gather phases)
+_COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """Global 'useful' FLOPs: 6·N_active·D (train) or 2·N_active·D (fwd)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# analytic cost model (scan-aware; see EXPERIMENTS.md §Dry-run caveats:
+# XLA cost_analysis counts while bodies once, so scanned stacks need an
+# explicit model for honest compute/memory terms)
+# ---------------------------------------------------------------------------
+
+def analytic_flops(cfg, shape, kind: str) -> float:
+    """Global forward+backward matmul FLOPs, structure-aware.
+
+    Counts: projections (2·params per token), attention quadratic terms with
+    causal/window truncation, MoE dispatch einsums, SSM scan elementwise work.
+    Train multiplies by 4 (fwd + 2·bwd + remat re-fwd).
+    """
+    from repro.models.config import MambaConfig, XLSTMConfig
+
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    t = shape.seq_len
+    bsz = shape.global_batch
+
+    if kind == "decode":
+        tokens = float(bsz)
+        t_ctx = float(min(t, cfg.sliding_window) if cfg.sliding_window else t)
+    else:
+        tokens = float(bsz * t)
+        # average causal context per token
+        t_ctx = float(min(t / 2.0, cfg.sliding_window or t))
+        if not cfg.causal:
+            t_ctx = float(t)  # bidirectional encoder attends to all
+
+    per_token = 0.0
+    for spec in cfg.layer_pattern:
+        if spec.mixer == "attn":
+            proj = 2.0 * (d * hq * hd + 2 * d * hkv * hd + hq * hd * d)
+            attn = 2.0 * 2.0 * hq * hd * t_ctx   # QK^T + PV
+            per_token += proj + attn
+        elif spec.mixer == "mamba":
+            mc = cfg.mamba or MambaConfig()
+            d_in = mc.expand * d
+            rank = mc.dt_rank or -(-d // 16)
+            proj = 2.0 * (d * 2 * d_in + d_in * (rank + 2 * mc.d_state)
+                          + rank * d_in + d_in * d)
+            scan = 10.0 * d_in * mc.d_state      # discretize + assoc-scan
+            per_token += proj + scan
+        elif spec.mixer == "mlstm":
+            xc = cfg.xlstm or XLSTMConfig()
+            d_in = int(xc.mlstm_proj_factor * d)
+            hd_in = d_in // cfg.n_heads
+            q_chunk = min(xc.chunk_size, t) if kind != "decode" else 1
+            proj = 2.0 * (d * 2 * d_in + 3 * d_in * hd_in + d_in * d)
+            if kind == "decode":
+                mix = 2.0 * 3.0 * d_in * hd_in   # state update + readout
+            else:
+                # intra-chunk causal quadratic (avg ctx Q/2 over scores + PV),
+                # + inter-chunk state readout, + per-chunk state update share
+                mix = (4.0 * d_in * (q_chunk / 2.0)
+                       + 2.0 * d_in * hd_in
+                       + 4.0 * d_in * hd_in / q_chunk)
+            per_token += proj + mix
+        elif spec.mixer == "slstm":
+            xc = cfg.xlstm or XLSTMConfig()
+            d_up = int(xc.slstm_proj_factor * d)
+            per_token += 2.0 * (8.0 * d * d + 2.0 * d * d_up)
+        if spec.ffn == "mlp":
+            per_token += 2.0 * 3.0 * d * cfg.d_ff
+        elif spec.ffn == "moe":
+            mo = cfg.moe
+            expert = 2.0 * mo.top_k * 3.0 * d * mo.d_ff_expert
+            if mo.shared_expert:
+                expert += 2.0 * 3.0 * d * (mo.d_ff_shared or mo.d_ff_expert)
+            router = 2.0 * d * mo.num_experts
+            dispatch = 2.0 * 2.0 * mo.num_experts * (mo.top_k * mo.capacity_factor) * d
+            per_token += expert + router + dispatch
+    per_token *= cfg.n_groups
+
+    # heads: logits for every token in train/encode, one position otherwise
+    if kind == "train" or cfg.is_encoder_only:
+        head_tokens = tokens
+    elif kind == "prefill":
+        head_tokens = float(bsz)
+    else:
+        head_tokens = tokens
+    head = 2.0 * d * cfg.vocab_size * head_tokens + 2.0 * d * tokens  # + score
+
+    fwd = per_token * tokens + head
+    if kind == "train":
+        return 4.0 * fwd          # fwd + 2x bwd + remat re-forward
+    return fwd
+
+
+def analytic_hbm_bytes(cfg, shape, kind: str, *, param_bytes: float,
+                       cache_bytes: float = 0.0) -> float:
+    """Global HBM traffic model (documented napkin math, not measured):
+
+    decode  : stream params once + stream cache once + small activations
+    prefill : params once + ~6 activation passes/layer + cache write
+    train   : ~6x params (grad/moment read-write) + ~10 activation passes
+              (fwd write, bwd read, remat rewrite, attention chunks)
+    """
+    d = cfg.d_model
+    t = shape.seq_len
+    bsz = shape.global_batch
+    act_dtype = 2.0  # bf16
+    if kind == "decode":
+        act = cfg.n_layers * bsz * d * act_dtype * 6.0
+        return param_bytes + cache_bytes + act
+    act_pass = cfg.n_layers * bsz * t * d * act_dtype
+    logits = bsz * t * cfg.vocab_size * 4.0
+    if kind == "prefill":
+        return param_bytes + 6.0 * act_pass + cache_bytes + logits / max(t, 1)
+    # train
+    return 6.0 * param_bytes + 10.0 * act_pass + 3.0 * logits
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh_desc: str
+    chips: int
+    # scan-aware analytic terms (primary)
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_global: float
+    useful_flops_ratio: float
+    peak_memory_per_chip: float | None
+    collective_counts: dict[str, float]
+    collective_bytes_by_kind: dict[str, float]
+    # raw XLA cost_analysis (while bodies counted once — cross-check only)
+    xla_flops_per_chip: float
+    xla_bytes_per_chip: float
+
+    def as_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, cfg, shape, kind: str, mesh, arch: str,
+            *, param_bytes_global: float = 0.0,
+            cache_bytes_global: float = 0.0) -> RooflineReport:
+    from repro.launch import hlo_costs
+
+    chips = 1
+    for n in mesh.shape.values():
+        chips *= n
+
+    cost = compiled.cost_analysis() or {}
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    coll = hlo_costs.collect_collectives(hlo)
+    coll_bytes = coll.weighted_bytes(_COLLECTIVE_FACTOR)
+
+    flops = analytic_flops(cfg, shape, kind) / chips
+    hbm = analytic_hbm_bytes(
+        cfg, shape, kind,
+        param_bytes=param_bytes_global, cache_bytes=cache_bytes_global,
+    ) / chips
+
+    compute_s = flops / mesh_lib.PEAK_FLOPS_BF16
+    memory_s = hbm / mesh_lib.HBM_BW
+    collective_s = coll_bytes / mesh_lib.ICI_BW
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape, kind)
+    ratio = mf / (flops * chips) if flops > 0 else float("nan")
+
+    peak_mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak_mem = float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0)
+            )
+    except Exception:
+        pass
+
+    return RooflineReport(
+        arch=arch, shape=shape.name,
+        mesh_desc="x".join(f"{k}{v}" for k, v in mesh.shape.items()),
+        chips=chips,
+        flops_per_chip=flops,
+        bytes_per_chip=hbm,
+        collective_bytes_per_chip=coll_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops_global=mf,
+        useful_flops_ratio=ratio,
+        peak_memory_per_chip=peak_mem,
+        collective_counts=coll.count_by_kind,
+        collective_bytes_by_kind=coll.bytes_by_kind,
+        xla_flops_per_chip=xla_flops,
+        xla_bytes_per_chip=xla_bytes,
+    )

@@ -1,0 +1,202 @@
+"""Parameter / activation / cache sharding rules for the production mesh.
+
+Philosophy (DESIGN.md §5): name-based rules over pytree paths, with
+divisibility checks and replicate fallback.  GSPMD keeps any sharding
+*correct*; these rules control the collective schedule and per-device
+footprint that the roofline analysis measures.
+
+Baseline layout:
+  * batch axes -> ("pod","data") when divisible, else replicated;
+  * matmul weights: column-parallel (shard output dim on "model") for
+    QKV/gate/up-style projections, row-parallel (shard input dim) for
+    O/down-style projections — the Megatron pairing that turns each block
+    into [col-parallel matmul -> row-parallel matmul -> one all-reduce];
+  * MoE expert weights: expert-parallel (leading E axis on "model");
+  * embeddings vocab-sharded; tiny leaves (norms, biases, score head)
+    replicated;
+  * KV caches: batch on data axes, sequence on "model" (flash-decoding
+    layout: per-chip partial attention + small combine all-reduce);
+  * SSM / xLSTM states: batch on data axes, inner features on "model".
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+
+PyTree = Any
+
+# path substrings -> which dim (negative index) is column/row parallel
+_COL_PARALLEL = (  # shard LAST dim on "model"
+    "wq/", "wk/", "wv/", "gate/", "up/", "in_proj/", "w_in/", "w_rec/",
+    "dt_proj/", "lm_head/",
+)
+_ROW_PARALLEL = (  # shard dim -2 on "model"
+    "wo/", "down/", "out_proj/", "x_proj/",
+)
+_REPLICATED = (
+    "norm", "score_head", "router/", "bias", "/b",
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts) + "/"
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def param_pspec(path_str: str, shape: tuple[int, ...], model_size: int,
+                *, fsdp_axes: tuple[str, ...] = (), fsdp_size: int = 1) -> P:
+    """PartitionSpec for one parameter leaf (stacked leading group dim ok).
+
+    With ``fsdp_axes`` set, a second dim is additionally sharded over the
+    data axes (ZeRO-3 / FSDP): required for the 400B-class models whose
+    parameters cannot be held at 1/model_size per chip.
+    """
+    nd = len(shape)
+    spec = [None] * nd
+
+    def _fsdp_fill() -> None:
+        if not fsdp_axes or nd < 2:
+            return
+        # shard the largest still-unsharded dim that divides
+        for i in sorted(range(nd), key=lambda j: -shape[j]):
+            if spec[i] is None and _div(shape[i], fsdp_size):
+                spec[i] = fsdp_axes
+                return
+
+    def col(dim_idx: int) -> P:
+        if _div(shape[dim_idx], model_size):
+            spec[dim_idx] = "model"
+        _fsdp_fill()
+        return P(*spec)
+
+    # MoE expert tensors: .../ffn/{gate,up,down} with ndim >= 3 and a leading
+    # (groups, experts, ...) — shard the expert axis (expert parallelism).
+    if "/ffn/" in path_str and any(
+        k in path_str for k in ("gate/", "up/", "down/")
+    ) and nd >= 3 and "shared" not in path_str:
+        # stacked: (G, E, d, ff) or unstacked (E, d, ff)
+        e_axis = nd - 3
+        if _div(shape[e_axis], model_size):
+            spec[e_axis] = "model"
+            _fsdp_fill()
+            return P(*spec)
+        # fall through to col/row rules if experts don't divide
+
+    if any(k in path_str for k in _REPLICATED):
+        return P(*spec)
+    if "embed/table" in path_str:
+        v_axis = nd - 2
+        if _div(shape[v_axis], model_size):
+            spec[v_axis] = "model"
+        _fsdp_fill()
+        return P(*spec)
+    for key in _COL_PARALLEL:
+        if key in path_str:
+            return col(nd - 1)
+    for key in _ROW_PARALLEL:
+        if key in path_str:
+            return col(nd - 2) if nd >= 2 else P(*spec)
+    # mamba per-channel tensors: A_log (G, d_in, N), D / dt_bias (G, d_in),
+    # conv_w (G, K, d_in), conv_b (G, d_in)
+    if "A_log" in path_str:
+        return col(nd - 2)
+    if any(k in path_str for k in ("conv_w", "conv_b", "dt_bias", "/D/")) or \
+            path_str.endswith("/D/"):
+        return col(nd - 1)
+    _fsdp_fill()
+    return P(*spec)
+
+
+def params_shardings(params: PyTree, mesh: Mesh, *, fsdp: bool = False) -> PyTree:
+    """NamedSharding pytree matching ``params``.
+
+    ``fsdp=True`` additionally shards a second weight dim over the data axes
+    (ZeRO-3) — mandatory for 400B-class models on a 256-chip pod.
+    """
+    model = mesh_lib.model_axis_size(mesh)
+    faxes = mesh_lib.data_axes(mesh) if fsdp else ()
+    fsize = mesh_lib.data_axis_size(mesh) if fsdp else 1
+
+    def one(path, leaf):
+        ps = param_pspec(_path_str(path), leaf.shape, model,
+                         fsdp_axes=faxes, fsdp_size=fsize)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def total_param_bytes(params: PyTree) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+def batch_pspec(batch: int, mesh: Mesh, rest_dims: int) -> P:
+    axes = mesh_lib.data_axes(mesh)
+    n = mesh_lib.data_axis_size(mesh)
+    if _div(batch, n) and n > 1:
+        return P(axes, *([None] * rest_dims))
+    return P(*([None] * (rest_dims + 1)))
+
+
+def tokens_sharding(batch: int, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, batch_pspec(batch, mesh, 1))
+
+
+def cache_pspec(path_str: str, shape: tuple[int, ...], batch: int,
+                mesh: Mesh) -> P:
+    """Decode-cache leaf sharding.
+
+    KV caches (G, B, S, Hkv, D): batch on data axes; sequence on "model"
+    (flash-decoding).  States (mamba/mlstm/slstm): batch on data; the largest
+    inner dim on "model" when divisible.
+    """
+    model = mesh_lib.model_axis_size(mesh)
+    daxes = mesh_lib.data_axes(mesh)
+    dsize = mesh_lib.data_axis_size(mesh)
+    nd = len(shape)
+    spec: list = [None] * nd
+    if nd >= 2 and _div(shape[1], dsize) and dsize > 1:
+        spec[1] = daxes
+    if ("/k/" in path_str or "/v/" in path_str or path_str.endswith("/k/")
+            or path_str.endswith("/v/")) and nd == 5:
+        if _div(shape[2], model):
+            spec[2] = "model"          # sequence axis
+        return P(*spec)
+    # states: shard the largest remaining dim divisible by model
+    if nd >= 3:
+        inner = max(range(2, nd), key=lambda i: shape[i])
+        if _div(shape[inner], model):
+            spec[inner] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache: PyTree, batch: int, mesh: Mesh) -> PyTree:
+    def one(path, leaf):
+        ps = cache_pspec(_path_str(path), leaf.shape, batch, mesh)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,157 @@
+"""Abstract input specs + step functions for the multi-pod dry-run.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, zero allocation); ``build_step``
+returns the jittable step the dry-run lowers:
+
+  train_4k     -> train_step(state, tokens, labels)
+  prefill_32k  -> prefill_step(params, tokens|embeds)   [encoder: encode_step]
+  decode_*     -> serve_step(params, cache, token|embed, pos): ONE new token
+                  against a seq_len KV cache / recurrent state.
+
+long_500k on dense/MoE/VLM decoders switches the config to the
+sliding-window variant (window 8192) — the sub-quadratic requirement; SSM /
+hybrid archs run their native constant-state decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, InputShape
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.training.optimizer import AdamW
+from repro.training.train import TrainState, make_train_step
+
+PyTree = Any
+
+SLIDING_WINDOW_LONG = 8192
+
+
+def serving_config(arch: str, shape_name: str) -> ModelConfig:
+    """The (possibly shape-adapted) config used for this dry-run cell."""
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and cfg.causal and cfg.arch_type not in (
+        "ssm", "hybrid"
+    ):
+        # sub-quadratic requirement: bounded sliding-window KV cache
+        cfg = dataclasses.replace(cfg, sliding_window=SLIDING_WINDOW_LONG)
+    return cfg
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    """Everything the dry-run needs to lower one (arch x shape) cell."""
+
+    arch: str
+    shape: InputShape
+    cfg: ModelConfig
+    model: Model
+    step_fn: Callable
+    abstract_args: tuple            # ShapeDtypeStructs, step_fn(*args)
+    donate_argnums: tuple[int, ...]
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _abstract_params(model: Model, dtype) -> PyTree:
+    return jax.eval_shape(lambda: model.init(jax.random.key(0), dtype=dtype))
+
+
+def _abstract_cache(model: Model, batch: int, capacity: int) -> PyTree:
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, capacity, dtype=jnp.bfloat16)
+    )
+
+
+def make_optimizer(moment_dtype=jnp.float32) -> AdamW:
+    return AdamW(learning_rate=3e-4, moment_dtype=moment_dtype)
+
+
+def build_step(arch: str, shape_name: str, *,
+               moment_dtype=jnp.float32,
+               remat: bool = True,
+               logits_mode: str = "last",
+               act_pspec=None,
+               cast_params_bf16: bool = False,
+               moe_ep_constraint: bool = False,
+               moe_impl: str = "einsum") -> StepBundle:
+    shape = SHAPES[shape_name]
+    cfg = serving_config(arch, shape_name)
+    if cfg.moe is not None and (moe_ep_constraint or moe_impl != "einsum"):
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, ep_sharding_constraint=moe_ep_constraint,
+                impl=moe_impl)
+        )
+    model = Model(cfg)
+    b, t = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        opt = make_optimizer(moment_dtype)
+        params = _abstract_params(model, jnp.float32)
+        state = jax.eval_shape(
+            lambda p: TrainState(p, opt.init(p)), params
+        )
+        tokens = _sds((b, t), jnp.int32)
+        labels = _sds((b, t), jnp.int32)
+        step = make_train_step(model, opt, remat=remat, act_pspec=act_pspec,
+                               cast_params_bf16=cast_params_bf16)
+        return StepBundle(arch, shape, cfg, model, step,
+                          (state, tokens, labels), (0,), "train")
+
+    params = _abstract_params(model, jnp.bfloat16)
+
+    if shape.kind == "prefill":
+        if cfg.is_encoder_only:
+            def encode_step(p, inputs):
+                out = model.forward(p, **inputs, logits_mode="all",
+                                    act_pspec=act_pspec)
+                return {"logits": out.logits, "risk_score": out.risk_score}
+
+            inputs = {"embeds": _sds((b, t, cfg.d_model), jnp.bfloat16)}
+            return StepBundle(arch, shape, cfg, model, encode_step,
+                              (params, inputs), (), "prefill")
+
+        def prefill_step(p, inputs):
+            out, cache = model.prefill(
+                p, **inputs, cache_capacity=t, logits_mode=logits_mode,
+                act_pspec=act_pspec,
+            )
+            return {"logits": out.logits, "risk_score": out.risk_score,
+                    "cache": cache}
+
+        if cfg.embeds_input:
+            inputs = {"embeds": _sds((b, t, cfg.d_model), jnp.bfloat16)}
+        else:
+            inputs = {"tokens": _sds((b, t), jnp.int32)}
+        return StepBundle(arch, shape, cfg, model, prefill_step,
+                          (params, inputs), (), "prefill")
+
+    # decode: one token, cache of capacity seq_len (window for sliding)
+    if not cfg.has_decode:
+        raise ValueError(f"{arch} is encoder-only: no decode shapes")
+    cache = _abstract_cache(model, b, t)
+
+    def serve_step(p, cache_in, inputs, pos):
+        out = model.decode_step(p, cache_in, **inputs, pos=pos,
+                                act_pspec=act_pspec)
+        return {"logits": out.logits, "risk_score": out.risk_score,
+                "cache": out.cache}
+
+    if cfg.embeds_input:
+        inputs = {"embeds": _sds((b, 1, cfg.d_model), jnp.bfloat16)}
+    else:
+        inputs = {"tokens": _sds((b, 1), jnp.int32)}
+    pos = _sds((), jnp.int32)
+    return StepBundle(arch, shape, cfg, model, serve_step,
+                      (params, cache, inputs, pos), (1,), "decode")

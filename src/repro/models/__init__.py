@@ -1,0 +1,14 @@
+"""Model zoo: composable JAX definitions for the assigned architecture pool."""
+from repro.models.config import (
+    BlockSpec,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    XLSTMConfig,
+)
+from repro.models.model import DecodeOutput, Model, ModelOutput
+
+__all__ = [
+    "BlockSpec", "MambaConfig", "ModelConfig", "MoEConfig", "XLSTMConfig",
+    "DecodeOutput", "Model", "ModelOutput",
+]

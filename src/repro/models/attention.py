@@ -1,0 +1,216 @@
+"""Attention: GQA with RoPE / M-RoPE / qk-norm, chunked (flash-style) prefill,
+sliding-window variants, and single-token decode over KV caches.
+
+The prefill path is *chunked over queries* (``lax.scan``) so the materialized
+score block is (B, C, H, T) instead of (B, T, H, T) — the pure-JAX analogue of
+flash attention's memory behaviour (exact softmax per query row, no O(T^2)
+resident tensor).  ``kernels/flash_attention.py`` provides the Pallas TPU
+version; this module is also its oracle at small sizes.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+PyTree = Any
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Per-attention-layer cache.
+
+    ``k``/``v``: (B, S, n_kv, head_dim) where S is the capacity — the full
+    sequence for dense decode, or the window size for sliding-window decode
+    (ring buffer, RoPE pre-applied at absolute positions before writing).
+    """
+
+    k: Array
+    v: Array
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    params = {
+        "wq": layers.init_linear(kq, d, cfg.n_heads * hd, dtype=dtype),
+        "wk": layers.init_linear(kk, d, cfg.n_kv_heads * hd, dtype=dtype),
+        "wv": layers.init_linear(kv, d, cfg.n_kv_heads * hd, dtype=dtype),
+        "wo": layers.init_linear(ko, cfg.n_heads * hd, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((hd,), dtype)
+        params["k_norm"] = jnp.ones((hd,), dtype)
+    return params
+
+
+def _gqa_scores_chunked(
+    q: Array,            # (B, Tq, Hq, D)
+    k: Array,            # (B, Tk, Hkv, D)
+    v: Array,            # (B, Tk, Hkv, D)
+    *,
+    causal: bool,
+    q_offset: Array | int,
+    sliding_window: int,
+    kv_valid_len: Array | None = None,
+    chunk: int = 256,
+) -> Array:
+    """Exact attention, scanned over query chunks. Returns (B, Tq, Hq, D)."""
+    b, tq, hq, d = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    qpk = hq // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    chunk = min(chunk, tq)
+    n_chunks = -(-tq // chunk)
+    pad = n_chunks * chunk - tq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = q.reshape(b, n_chunks, chunk, hkv, qpk, d)
+    kpos = jnp.arange(tk)
+
+    def one_chunk(carry, inputs):
+        ci, q_blk = inputs  # q_blk: (B, C, Hkv, qpk, D)
+        logits = jnp.einsum(
+            "bchgd,bthd->bchgt", q_blk.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale
+        qpos = q_offset + ci * chunk + jnp.arange(chunk)  # (C,)
+        mask = jnp.ones((chunk, tk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if sliding_window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - sliding_window
+        if kv_valid_len is not None:
+            mask &= kpos[None, :] < kv_valid_len
+        logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bchgt,bthd->bchgd", probs, v.astype(jnp.float32))
+        return carry, out.astype(q_blk.dtype)
+
+    _, outs = jax.lax.scan(
+        one_chunk, None, (jnp.arange(n_chunks), jnp.moveaxis(qc, 1, 0))
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n_chunks * chunk, hq, d)
+    return out[:, :tq]
+
+
+def attention_forward(
+    params: PyTree,
+    x: Array,                     # (B, T, d_model)
+    cfg: ModelConfig,
+    *,
+    angles: Array | None,         # (B, T, head_dim/2) rope angles (None = no rope)
+    cache: KVCache | None = None,
+    cache_pos: Array | int = 0,   # absolute position of x[:, 0]
+    chunk: int = 256,
+    attn_impl: str = "reference",
+) -> tuple[Array, KVCache | None]:
+    """Unified attention entry point.
+
+    * train / prefill: ``cache is None`` -> self-attention over x, optionally
+      returning a fresh cache would be handled by the caller via k/v outputs
+      (we return None; prefill cache construction happens in model.py).
+    * decode: ``cache`` given, T == 1 -> write k/v at ``cache_pos`` (modulo
+      window for sliding-window layers) and attend over the cache.
+    """
+    b, t, _ = x.shape
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+
+    q = layers.linear(params["wq"], x).reshape(b, t, hq, hd)
+    k = layers.linear(params["wk"], x).reshape(b, t, hkv, hd)
+    v = layers.linear(params["wv"], x).reshape(b, t, hkv, hd)
+
+    if cfg.qk_norm:
+        q = layers.rmsnorm_headwise(params["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm_headwise(params["k_norm"], k, cfg.norm_eps)
+
+    if angles is not None:
+        q = layers.apply_rope(q, angles)
+        k = layers.apply_rope(k, angles)
+
+    if cache is None:
+        if attn_impl == "pallas" and t >= 128:
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(
+                q, k, v, causal=cfg.causal, sliding_window=cfg.sliding_window
+            )
+        else:
+            out = _gqa_scores_chunked(
+                q, k, v,
+                causal=cfg.causal, q_offset=0,
+                sliding_window=cfg.sliding_window, chunk=chunk,
+            )
+        new_cache = None
+    else:
+        # decode: t is 1 (or small); write into cache then attend.
+        capacity = cache.k.shape[1]
+        if cfg.sliding_window > 0 and capacity == cfg.sliding_window:
+            write_idx = jnp.asarray(cache_pos) % capacity
+        else:
+            write_idx = jnp.asarray(cache_pos)
+        k_new = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, write_idx, 0, 0)
+        )
+        v_new = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, write_idx, 0, 0)
+        )
+        new_cache = KVCache(k=k_new, v=v_new)
+        if cfg.sliding_window > 0 and capacity == cfg.sliding_window:
+            # ring buffer: every slot valid once pos >= capacity; positions
+            # are implicit (RoPE pre-applied), no causal mask needed beyond
+            # validity. For pos < capacity only slots <= pos are valid.
+            valid = jnp.minimum(jnp.asarray(cache_pos) + 1, capacity)
+            out = _gqa_scores_chunked(
+                q, k_new, v_new, causal=False, q_offset=cache_pos,
+                sliding_window=0, kv_valid_len=valid, chunk=chunk,
+            )
+        else:
+            valid = jnp.asarray(cache_pos) + 1
+            out = _gqa_scores_chunked(
+                q, k_new, v_new, causal=False, q_offset=cache_pos,
+                sliding_window=0, kv_valid_len=valid, chunk=chunk,
+            )
+
+    out = out.reshape(b, t, hq * hd)
+    return layers.linear(params["wo"], out), new_cache
+
+
+def prefill_kv(
+    params: PyTree,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    angles: Array | None,
+    capacity: int,
+) -> KVCache:
+    """Build a decode cache from a prompt (used by serve prefill)."""
+    b, t, _ = x.shape
+    hd, hkv = cfg.head_dim, cfg.n_kv_heads
+    k = layers.linear(params["wk"], x).reshape(b, t, hkv, hd)
+    v = layers.linear(params["wv"], x).reshape(b, t, hkv, hd)
+    if cfg.qk_norm:
+        k = layers.rmsnorm_headwise(params["k_norm"], k, cfg.norm_eps)
+    if angles is not None:
+        k = layers.apply_rope(k, angles)
+    if cfg.sliding_window > 0:
+        w = min(cfg.sliding_window, capacity)
+        orig_t = t
+        k, v = k[:, -w:], v[:, -w:]
+        t = k.shape[1]
+        capacity = w
+        if orig_t >= w:
+            # Align the ring buffer so absolute position p sits at slot p % w:
+            # token t-w+i must land at slot (t-w+i) % w = (i + t % w) % w.
+            k = jnp.roll(k, shift=orig_t % w, axis=1)
+            v = jnp.roll(v, shift=orig_t % w, axis=1)
+    pad = capacity - t
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return KVCache(k=k, v=v)

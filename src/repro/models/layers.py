@@ -1,0 +1,140 @@
+"""Shared neural-net building blocks (pure JAX, pytree params)."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+def _dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return jax.random.uniform(key, (in_dim, out_dim), dtype, -scale, scale)
+
+
+def init_linear(key, in_dim: int, out_dim: int, *, bias: bool = False,
+                dtype=jnp.float32) -> PyTree:
+    params = {"w": _dense_init(key, in_dim, out_dim, dtype)}
+    if bias:
+        params["b"] = jnp.zeros((out_dim,), dtype)
+    return params
+
+
+def linear(params: PyTree, x: Array) -> Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> PyTree:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: PyTree, x: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rmsnorm_headwise(scale: Array, x: Array, eps: float = 1e-5) -> Array:
+    """qk-norm: RMSNorm over the head_dim axis of (..., heads, head_dim)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> PyTree:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(params: PyTree, tokens: Array, dtype=jnp.bfloat16) -> Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: Array, head_dim: int, theta: float) -> Array:
+    """positions (..., T) -> angles (..., T, head_dim/2)."""
+    inv = rope_frequencies(head_dim, theta)
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x: Array, angles: Array) -> Array:
+    """x: (B, T, H, D); angles: (B, T, D/2) or (T, D/2)."""
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    if angles.ndim == 2:  # (T, D/2) -> broadcast batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[..., None, :]  # (B, T, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(dtype)
+
+
+def mrope_angles(position_ids: Array, head_dim: int, theta: float,
+                 sections: tuple[int, int, int]) -> Array:
+    """Qwen2-VL multimodal RoPE (arXiv:2409.12191).
+
+    ``position_ids``: (3, B, T) — temporal / height / width position ids.
+    The rotary half-dim is partitioned into three contiguous sections that
+    take their angle from the t/h/w id respectively.  For pure-text tokens
+    all three ids coincide and M-RoPE reduces exactly to standard RoPE.
+    Returns angles (B, T, head_dim/2).
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_frequencies(head_dim, theta)          # (half,)
+    ang = position_ids[..., None].astype(jnp.float32) * inv  # (3, B, T, half)
+    sec_idx = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )  # (half,) -> which of t/h/w drives each channel
+    return jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -1),                    # (B, T, half, 3)
+        sec_idx[None, None, :, None],
+        axis=-1,
+    )[..., 0]                                        # (B, T, half)
+
+
+def text_position_ids(batch: int, seq: int, offset: Array | int = 0) -> Array:
+    """(3, B, T) position ids for text-only input (t = h = w)."""
+    pos = jnp.arange(seq)[None, :] + jnp.asarray(offset)
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    return jnp.broadcast_to(pos[None], (3, batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, dtype=dtype),
+        "up": init_linear(k2, d_model, d_ff, dtype=dtype),
+        "down": init_linear(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp(params: PyTree, x: Array) -> Array:
+    g = jax.nn.silu(linear(params["gate"], x))
+    u = linear(params["up"], x)
+    return linear(params["down"], g * u)

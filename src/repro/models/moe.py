@@ -1,0 +1,177 @@
+"""Mixture-of-Experts feed-forward with capacity-based dispatch.
+
+GShard/Switch-style top-k routing expressed as dense one-hot einsums so the
+whole block is jit/pjit friendly:
+
+    tokens --router--> top-k experts --dispatch one-hot--> per-expert slots
+           --expert SwiGLU (batched over E)--> combine weighted by gate probs
+
+Experts are *expert-parallel*: the leading E axis of every expert weight is
+sharded on the mesh "model" axis; the dispatch/combine einsums then lower to
+the all-to-all-class collectives the roofline analysis tracks.
+
+Honest-FLOPs note: compute per layer is E × capacity × ffn ≈
+top_k × tokens × ffn × capacity_factor — i.e. proportional to *active*
+parameters, not total (no dense-all-experts shortcut), so `cost_analysis`
+reflects the real MoE arithmetic.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import MoEConfig
+
+Array = jax.Array
+PyTree = Any
+
+
+def init_moe(key, d_model: int, mo: MoEConfig, dtype=jnp.float32) -> PyTree:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    e, dff = mo.num_experts, mo.d_ff_expert
+    import math
+    scale = 1.0 / math.sqrt(d_model)
+    params = {
+        "router": layers.init_linear(kr, d_model, e, dtype=dtype),
+        "gate": jax.random.uniform(kg, (e, d_model, dff), dtype, -scale, scale),
+        "up": jax.random.uniform(ku, (e, d_model, dff), dtype, -scale, scale),
+        "down": jax.random.uniform(kd, (e, dff, d_model), dtype,
+                                   -1.0 / math.sqrt(dff), 1.0 / math.sqrt(dff)),
+    }
+    if mo.shared_expert:
+        params["shared"] = layers.init_mlp(
+            ks, d_model, mo.d_ff_shared or mo.d_ff_expert, dtype=dtype
+        )
+    return params
+
+
+def _capacity(n_tokens: int, mo: MoEConfig) -> int:
+    cap = int(n_tokens * mo.top_k / mo.num_experts * mo.capacity_factor)
+    return max(cap, mo.top_k)
+
+
+# token-chunk size for the dispatch scan: bounds the transient one-hot
+# (chunk, E, cap_chunk) tensor that a single global dispatch would blow up to
+# O(n·E·cap) (1.3e12 elements for a 400B MoE at 1M tokens).
+DISPATCH_CHUNK = 4096
+
+
+def _dispatch_chunk(params: PyTree, xc: Array, gate_vals: Array,
+                    expert_idx: Array, mo: MoEConfig, cap: int) -> Array:
+    """GShard-style capacity dispatch for ONE token chunk.
+
+    xc: (c, d); gate_vals/expert_idx: (c, k).  Returns (c, d).
+    """
+    c, d = xc.shape
+    e, k = mo.num_experts, mo.top_k
+
+    def ep(t):
+        """Expert-parallel constraint: pin the E axis to the "model" mesh
+        axis so cross-device reductions of expert buffers become
+        reduce-scatters of each rank's own experts (§Perf)."""
+        if mo.ep_sharding_constraint:
+            from jax.sharding import PartitionSpec as P
+            spec = ["model"] + [None] * (t.ndim - 1)
+            return jax.lax.with_sharding_constraint(t, P(*spec))
+        return t
+
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)    # (c, k, e)
+    flat_choice = onehot.reshape(c * k, e)
+    pos_in_expert = jnp.cumsum(flat_choice, axis=0) * flat_choice - 1
+    pos_in_expert = pos_in_expert.reshape(c, k, e)
+    within_cap = (pos_in_expert < cap) & (pos_in_expert >= 0)  # dropped if over
+
+    slot_onehot = jax.nn.one_hot(
+        jnp.where(within_cap, pos_in_expert, -1), cap, dtype=xc.dtype
+    )  # (c, k, e, cap)
+    dispatch = jnp.sum(slot_onehot, axis=1)                    # (c, e, cap)
+    combine = jnp.sum(
+        slot_onehot * gate_vals[..., None, None].astype(xc.dtype), axis=1
+    )  # (c, e, cap)
+
+    # route tokens to expert buffers:  (e, cap, d).
+    # The dispatch/combine einsums contract over sharded axes, so their
+    # partial sums are what the mesh all-reduces: keep them in the input
+    # dtype (bf16) instead of f32 accumulation — each output element sums
+    # <= top_k one-hot-selected terms, so bf16 is exact for top-1 and
+    # rounding-safe for small k, and the collective bytes halve (§Perf).
+    acc = xc.dtype
+    expert_in = ep(jnp.einsum("nec,nd->ecd", dispatch, xc,
+                              preferred_element_type=acc))
+    g = jax.nn.silu(ep(jnp.einsum("ecd,edf->ecf", expert_in,
+                                  params["gate"].astype(xc.dtype))))
+    u = ep(jnp.einsum("ecd,edf->ecf", expert_in, params["up"].astype(xc.dtype)))
+    expert_out = ep(jnp.einsum("ecf,efd->ecd", g * u,
+                               params["down"].astype(xc.dtype)))
+    return jnp.einsum("nec,ecd->nd", combine, expert_out,
+                      preferred_element_type=acc)               # (c, d)
+
+
+def moe_forward(params: PyTree, x: Array, mo: MoEConfig,
+                *, dispatch_chunk: int = DISPATCH_CHUNK
+                ) -> tuple[Array, Array]:
+    """x: (B, T, d) -> (out, aux_loss).
+
+    Dispatch runs in token chunks under ``lax.scan`` so the transient
+    (chunk, E, cap) one-hot stays VMEM-scale; capacity is per chunk
+    (cap = chunk·top_k/E·capacity_factor), which matches how real MoE
+    runtimes bound skew per microbatch.
+
+    aux_loss is the standard load-balance loss: E · Σ_e f_e · p_e where f_e is
+    the fraction of tokens whose top-1 choice is e and p_e the mean router
+    probability of e (encourages uniform expert utilization).
+    """
+    b, t, d = x.shape
+    n = b * t
+    e, k = mo.num_experts, mo.top_k
+
+    xf = x.reshape(n, d)
+    logits = layers.linear(params["router"], xf).astype(jnp.float32)  # (n, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k gates, renormalized over the selected experts
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (n, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    chunk = min(dispatch_chunk, n)
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    if pad:
+        xf_p = jnp.pad(xf, ((0, pad), (0, 0)))
+        gate_p = jnp.pad(gate_vals, ((0, pad), (0, 0)))  # zero gates: no-op
+        idx_p = jnp.pad(expert_idx, ((0, pad), (0, 0)))
+    else:
+        xf_p, gate_p, idx_p = xf, gate_vals, expert_idx
+    cap = _capacity(chunk, mo)
+
+    if n_chunks == 1:
+        out = _dispatch_chunk(params, xf_p, gate_p, idx_p, mo, cap)
+    else:
+        def body(_, inp):
+            xc, gc, ic = inp
+            return None, _dispatch_chunk(params, xc, gc, ic, mo, cap)
+
+        _, outs = jax.lax.scan(
+            body, None,
+            (xf_p.reshape(n_chunks, chunk, d),
+             gate_p.reshape(n_chunks, chunk, k),
+             idx_p.reshape(n_chunks, chunk, k)),
+        )
+        out = outs.reshape(n_chunks * chunk, d)
+    out = out[:n]
+
+    if mo.shared_expert:
+        out = out + layers.mlp(params["shared"], xf)
+
+    # load-balance auxiliary loss (Switch Transformer, Eq. 4-6)
+    top1 = jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32)
+    f = jnp.mean(top1, axis=0)
+    p = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f * p)
+
+    return out.reshape(b, t, d), aux

@@ -1,0 +1,285 @@
+"""xLSTM mixers (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM — chunkwise-parallel form (TPU adaptation, DESIGN.md §2):
+  C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+  h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+Within a chunk the decayed contributions are a causal Q×Q quadratic form with
+decay D_ts = exp(gamma_t - gamma_s) (gamma = cumsum log f, computed stably via
+log-sigmoid); across chunks the (B, H, d_k, d_v) matrix state is carried by a
+sequential scan — the chunked-linear-attention shape that fits TPU MXU tiling.
+Gates use sigmoid(i), sigmoid(f) (bounded, no max-stabilizer needed in the
+parallel form; the exponential-gating stabilizer of the paper is kept in the
+sLSTM cell where it is load-bearing).
+
+sLSTM — sequential scan with the paper's exponential gating + stabilizer:
+  m_t = max(f~ + m_{t-1}, i~);  i' = exp(i~ - m_t);  f' = exp(f~ + m_{t-1} - m_t)
+  c_t = f' c_{t-1} + i' z_t ;  n_t = f' n_{t-1} + i' ;  h_t = o_t · c_t / n_t
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import XLSTMConfig
+
+Array = jax.Array
+PyTree = Any
+
+
+class MLSTMState(NamedTuple):
+    c: Array  # (B, H, d_k, d_v) matrix memory
+    n: Array  # (B, H, d_k) normalizer
+
+
+class SLSTMState(NamedTuple):
+    c: Array  # (B, d)
+    n: Array  # (B, d)
+    h: Array  # (B, d)
+    m: Array  # (B, d) stabilizer
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, n_heads: int, xc: XLSTMConfig,
+               dtype=jnp.float32) -> PyTree:
+    """q/k/v are head-wise block-diagonal (the official LinearHeadwiseExpand):
+    (H, hd, hd) per projection instead of full d_in x d_in — this is what
+    keeps the 48-block xLSTM at the ~1-2B scale its name implies."""
+    d_in = int(xc.mlstm_proj_factor * d_model)
+    hd = d_in // n_heads
+    keys = jax.random.split(key, 7)
+    scale = 1.0 / math.sqrt(hd)
+    def headwise(k):
+        return jax.random.uniform(k, (n_heads, hd, hd), dtype, -scale, scale)
+    return {
+        "up": layers.init_linear(keys[0], d_model, 2 * d_in, dtype=dtype),
+        "wq": headwise(keys[1]),
+        "wk": headwise(keys[2]),
+        "wv": headwise(keys[3]),
+        "w_if": layers.init_linear(keys[4], d_in, 2 * n_heads, bias=True,
+                                   dtype=dtype),
+        "down": layers.init_linear(keys[6], d_in, d_model, dtype=dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_f, log_i, state: MLSTMState):
+    """One chunk of the chunkwise-parallel mLSTM.
+
+    q,k,v: (B, H, Q, d);  log_f/log_i: (B, H, Q);  state: C (B,H,d,d), n (B,H,d).
+    Returns (h (B,H,Q,d), new_state).
+    """
+    bq = q.shape[2]
+    gamma = jnp.cumsum(log_f, axis=-1)                     # (B,H,Q)
+    # inter-chunk: state contribution decayed by gamma_t
+    decay_t = jnp.exp(gamma)                               # (B,H,Q)
+    h_inter = jnp.einsum("bhqk,bhkv->bhqv", q, state.c) * decay_t[..., None]
+    n_inter = jnp.einsum("bhqk,bhk->bhq", q, state.n) * decay_t
+
+    # intra-chunk: D_ts = exp(gamma_t - gamma_s + log_i_s), causal
+    d_mat = gamma[..., :, None] - gamma[..., None, :] + log_i[..., None, :]
+    mask = jnp.tril(jnp.ones((bq, bq), bool))
+    d_mat = jnp.where(mask, d_mat, -jnp.inf)
+    d_exp = jnp.exp(d_mat)                                 # (B,H,Q,Q)
+    scores = jnp.einsum("bhqk,bhsk->bhqs", q, k) * d_exp
+    h_intra = jnp.einsum("bhqs,bhsv->bhqv", scores, v)
+    n_intra = jnp.sum(scores, axis=-1)
+
+    num = h_inter + h_intra
+    den = n_inter + n_intra
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+    # state update to end of chunk
+    total_decay = jnp.exp(gamma[..., -1])                  # (B,H)
+    per_s = jnp.exp(gamma[..., -1:] - gamma + log_i)       # (B,H,Q)
+    c_new = state.c * total_decay[..., None, None] + jnp.einsum(
+        "bhsk,bhsv->bhkv", k * per_s[..., None], v
+    )
+    n_new = state.n * total_decay[..., None] + jnp.einsum(
+        "bhsk,bhs->bhk", k, per_s
+    )
+    return h, MLSTMState(c=c_new, n=n_new)
+
+
+def mlstm_forward(
+    params: PyTree,
+    x: Array,
+    n_heads: int,
+    xc: XLSTMConfig,
+    *,
+    initial_state: MLSTMState | None = None,
+    return_state: bool = False,
+) -> tuple[Array, MLSTMState | None]:
+    b, t, d_model = x.shape
+    d_in = int(xc.mlstm_proj_factor * d_model)
+    hd = d_in // n_heads
+    scale = 1.0 / math.sqrt(hd)
+
+    xm, z = jnp.split(layers.linear(params["up"], x), 2, axis=-1)
+    xh = xm.reshape(b, t, n_heads, hd)
+    def heads(w):
+        return jnp.einsum(
+            "bthd,hde->bhte", xh, params[w].astype(xh.dtype)
+        ).astype(jnp.float32)
+    q, k, v = heads("wq") * scale, heads("wk"), heads("wv")
+
+    gates = layers.linear(params["w_if"], xm).astype(jnp.float32)  # (B,T,2H)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+    log_i = jax.nn.log_sigmoid(i_raw).transpose(0, 2, 1)   # (B,H,T)
+    log_f = jax.nn.log_sigmoid(f_raw).transpose(0, 2, 1)
+
+    qc = min(xc.chunk_size, t)
+    n_chunks = -(-t // qc)
+    pad = n_chunks * qc - t
+    def padt(a, axis):
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(a, widths)
+    if pad:
+        q, k, v = (padt(a, 2) for a in (q, k, v))
+        # pad forget gates with log(1)=0? safer: pad with very negative i
+        log_i = padt(log_i, 2) + jnp.pad(
+            jnp.zeros((b, n_heads, t)), ((0, 0), (0, 0), (0, pad)),
+            constant_values=-1e9,
+        )
+        log_f = padt(log_f, 2)
+
+    def split_chunks(a):  # (B,H,T,..) -> (n_chunks, B,H,Q,..)
+        shp = a.shape
+        return jnp.moveaxis(
+            a.reshape(shp[0], shp[1], n_chunks, qc, *shp[3:]), 2, 0
+        )
+
+    state0 = initial_state or MLSTMState(
+        c=jnp.zeros((b, n_heads, hd, hd), jnp.float32),
+        n=jnp.zeros((b, n_heads, hd), jnp.float32),
+    )
+
+    def step(state, inp):
+        qi, ki, vi, lfi, lii = inp
+        h, new_state = _mlstm_chunk(qi, ki, vi, lfi, lii, state)
+        return new_state, h
+
+    final_state, hs = jax.lax.scan(
+        step, state0,
+        (split_chunks(q), split_chunks(k), split_chunks(v),
+         split_chunks(log_f), split_chunks(log_i)),
+    )
+    h = jnp.moveaxis(hs, 0, 2).reshape(b, n_heads, n_chunks * qc, hd)[:, :, :t]
+    h = h.transpose(0, 2, 1, 3).reshape(b, t, d_in).astype(x.dtype)
+    out = layers.linear(params["down"], h * jax.nn.silu(z))
+    return out, (final_state if return_state else None)
+
+
+def mlstm_decode_step(
+    params: PyTree, x: Array, n_heads: int, xc: XLSTMConfig, state: MLSTMState
+) -> tuple[Array, MLSTMState]:
+    """One-token recurrent step. x: (B, 1, d_model)."""
+    b, _, d_model = x.shape
+    d_in = int(xc.mlstm_proj_factor * d_model)
+    hd = d_in // n_heads
+    scale = 1.0 / math.sqrt(hd)
+
+    xm, z = jnp.split(layers.linear(params["up"], x), 2, axis=-1)
+    xh = xm.reshape(b, n_heads, hd)
+    def heads(w):
+        return jnp.einsum(
+            "bhd,hde->bhe", xh, params[w].astype(xh.dtype)
+        ).astype(jnp.float32)
+    q, k, v = heads("wq") * scale, heads("wk"), heads("wv")
+    gates = layers.linear(params["w_if"], xm).astype(jnp.float32).reshape(b, 2 * n_heads)
+    i_g = jax.nn.sigmoid(gates[:, :n_heads])
+    f_g = jax.nn.sigmoid(gates[:, n_heads:])
+
+    c = state.c * f_g[..., None, None] + i_g[..., None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", k, v
+    )
+    n = state.n * f_g[..., None] + i_g[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, c)
+    den = jnp.einsum("bhk,bhk->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    h = h.reshape(b, 1, d_in).astype(x.dtype)
+    out = layers.linear(params["down"], h * jax.nn.silu(z))
+    return out, MLSTMState(c=c, n=n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, xc: XLSTMConfig, dtype=jnp.float32) -> PyTree:
+    keys = jax.random.split(key, 4)
+    d_up = int(xc.slstm_proj_factor * d_model)
+    return {
+        "w_in": layers.init_linear(keys[0], d_model, 4 * d_model, bias=True,
+                                   dtype=dtype),
+        "w_rec": layers.init_linear(keys[1], d_model, 4 * d_model, dtype=dtype),
+        "up": layers.init_linear(keys[2], d_model, d_up, dtype=dtype),
+        "down": layers.init_linear(keys[3], d_up, d_model, dtype=dtype),
+    }
+
+
+def _slstm_cell(params: PyTree, x_t: Array, state: SLSTMState) -> tuple[Array, SLSTMState]:
+    """One step of the exponential-gated sLSTM with stabilizer state m."""
+    pre = layers.linear(params["w_in"], x_t).astype(jnp.float32) + layers.linear(
+        params["w_rec"], state.h.astype(x_t.dtype)
+    ).astype(jnp.float32)
+    i_raw, f_raw, z_raw, o_raw = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(f_raw + state.m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_raw + state.m - m_new)
+    c = f_g * state.c + i_g * jnp.tanh(z_raw)
+    n = f_g * state.n + i_g
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1.0)
+    return h, SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_forward(
+    params: PyTree,
+    x: Array,
+    xc: XLSTMConfig,
+    *,
+    initial_state: SLSTMState | None = None,
+    return_state: bool = False,
+) -> tuple[Array, SLSTMState | None]:
+    b, t, d = x.shape
+    state0 = initial_state or init_slstm_state(b, d)
+
+    def step(state, x_t):
+        h, new_state = _slstm_cell(params, x_t, state)
+        return new_state, h
+
+    final, hs = jax.lax.scan(step, state0, jnp.moveaxis(x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)      # (B, T, d)
+    up = jax.nn.gelu(layers.linear(params["up"], h))
+    out = layers.linear(params["down"], up)
+    return out, (final if return_state else None)
+
+
+def slstm_decode_step(
+    params: PyTree, x: Array, xc: XLSTMConfig, state: SLSTMState
+) -> tuple[Array, SLSTMState]:
+    h, new_state = _slstm_cell(params, x[:, 0], state)
+    h = h[:, None].astype(x.dtype)
+    out = layers.linear(params["down"], jax.nn.gelu(layers.linear(params["up"], h)))
+    return out, new_state
+
+
+def init_mlstm_state(batch: int, d_model: int, n_heads: int,
+                     xc: XLSTMConfig) -> MLSTMState:
+    d_in = int(xc.mlstm_proj_factor * d_model)
+    hd = d_in // n_heads
+    return MLSTMState(
+        c=jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, n_heads, hd), jnp.float32),
+    )
+
+
+def init_slstm_state(batch: int, d_model: int) -> SLSTMState:
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=z)

@@ -1,0 +1,63 @@
+"""Micro-batching: group in-flight requests per resolved predictor.
+
+The serving layer is stateless (paper design principle #1); the batcher is a
+per-replica, in-memory accumulation window — requests are grouped by their
+resolved live predictor so one jitted executable call serves many tenants
+(multi-tenancy & reuse, principle #2).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable
+
+from repro.serving.types import ScoringRequest
+
+
+@dataclasses.dataclass
+class MicroBatcher:
+    """Accumulates requests; flushes per-key when size or age limits hit.
+
+    ``clock`` is injectable for deterministic tests.
+    """
+
+    max_batch: int = 64
+    max_wait_ms: float = 2.0
+    clock: Callable[[], float] = time.perf_counter
+
+    def __post_init__(self) -> None:
+        self._pending: dict[str, list[ScoringRequest]] = collections.defaultdict(list)
+        self._oldest: dict[str, float] = {}
+
+    def add(self, key: str, request: ScoringRequest) -> list[ScoringRequest] | None:
+        """Returns a full batch to execute, or None if still accumulating."""
+        pending = self._pending[key]
+        if not pending:
+            self._oldest[key] = self.clock()
+        pending.append(request)
+        if len(pending) >= self.max_batch:
+            return self._take(key)
+        return None
+
+    def expired(self) -> list[tuple[str, list[ScoringRequest]]]:
+        """All (key, batch) pairs whose window has aged out."""
+        now = self.clock()
+        out = []
+        for key, t0 in list(self._oldest.items()):
+            if (now - t0) * 1000.0 >= self.max_wait_ms and self._pending[key]:
+                out.append((key, self._take(key)))
+        return out
+
+    def flush_all(self) -> list[tuple[str, list[ScoringRequest]]]:
+        return [(k, self._take(k)) for k in list(self._pending) if self._pending[k]]
+
+    def _take(self, key: str) -> list[ScoringRequest]:
+        batch = self._pending[key]
+        self._pending[key] = []
+        self._oldest.pop(key, None)
+        return batch
+
+    @property
+    def pending_count(self) -> int:
+        return sum(len(v) for v in self._pending.values())

@@ -1,0 +1,217 @@
+"""MuseServer: the scoring data plane (paper Fig. 1).
+
+Request path:  intent -> routing (live + shadows) -> feature enrichment ->
+expert models -> T^C -> A -> T^Q -> response; shadow scores go to the sink.
+
+The server is the *data plane*; control-plane operations (deploying
+predictors, publishing routing tables, triggering calibration refreshes) are
+explicit methods invoked by the rollout controller — never by clients.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping
+
+import numpy as np
+
+from repro.core.predictor import Predictor, PredictorSpec, deploy_predictor
+from repro.core.quantiles import StreamingQuantileEstimator, required_sample_size
+from repro.core.registry import ModelPool
+from repro.core.routing import Intent, RoutingTable
+from repro.core.transforms import QuantileMap
+from repro.serving.shadow import ShadowSink
+from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
+
+
+class FeatureStore:
+    """Per-tenant derived-feature lookup (paper's 'Easy Feature Evolution').
+
+    Models may require wider feature vectors than the client payload carries;
+    the store supplies the model-specific derived features so new model
+    versions deploy without client payload changes.
+    """
+
+    def __init__(self) -> None:
+        self._store: dict[str, np.ndarray] = {}
+
+    def put(self, tenant: str, derived: np.ndarray) -> None:
+        self._store[tenant] = np.asarray(derived, np.float32)
+
+    def enrich(self, intent: Intent, features: np.ndarray, target_dim: int
+               ) -> np.ndarray:
+        features = np.asarray(features, np.float32)
+        if features.shape[-1] >= target_dim:
+            return features[..., :target_dim]
+        derived = self._store.get(intent.tenant)
+        pad_width = target_dim - features.shape[-1]
+        if derived is None:
+            pad = np.zeros(features.shape[:-1] + (pad_width,), np.float32)
+        else:
+            reps = -(-pad_width // len(derived))
+            pad = np.tile(derived, reps)[:pad_width]
+            pad = np.broadcast_to(pad, features.shape[:-1] + (pad_width,))
+        return np.concatenate([features, pad], axis=-1)
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    track_quantiles: bool = True
+    quantile_capacity: int = 131072
+    refresh_alert_rate: float = 0.01   # Eq. 5 gating for auto-refresh readiness
+    refresh_rel_error: float = 0.2
+
+
+class MuseServer:
+    def __init__(self, routing: RoutingTable,
+                 config: ServerConfig | None = None) -> None:
+        self.pool = ModelPool()
+        self.predictors: dict[str, Predictor] = {}
+        self.routing = routing
+        self.sink = ShadowSink()
+        self.features = FeatureStore()
+        self.config = config or ServerConfig()
+        # per (tenant, predictor) streaming estimators for calibration refresh
+        self._estimators: dict[tuple[str, str], StreamingQuantileEstimator] = {}
+        self.metrics: dict[str, float] = {"requests": 0, "shadow_evals": 0}
+
+    # ------------------------------------------------------------------ control
+    def deploy(self, spec: PredictorSpec,
+               model_factories: Mapping[str, Callable[[], Any]],
+               model_costs: Mapping[str, float] | None = None) -> Predictor:
+        pred = deploy_predictor(spec, self.pool, model_factories, model_costs)
+        self.predictors[spec.name] = pred
+        return pred
+
+    def decommission(self, name: str) -> None:
+        pred = self.predictors.pop(name)
+        pred.release(self.pool)
+
+    def publish_routing(self, table: RoutingTable) -> None:
+        """Atomic routing swap — the transparent model switching primitive."""
+        missing = [n for n in table.referenced_predictors()
+                   if n not in self.predictors]
+        if missing:
+            raise KeyError(f"routing references undeployed predictors: {missing}")
+        self.routing = table
+
+    def swap_transformation(self, predictor_name: str, qm: QuantileMap) -> None:
+        """T^Q_v0 -> T^Q_v1 without touching models (Sec. 3.1)."""
+        pred = self.predictors[predictor_name]
+        self.predictors[predictor_name] = pred.with_updated_pipeline(
+            pred.pipeline.with_quantile_map(qm)
+        )
+
+    # ------------------------------------------------------------------- data
+    def _model_dim(self, pred: Predictor) -> int:
+        dims = [h.metadata.get("feature_dim") for h in pred._handles]
+        dims = [d for d in dims if d]
+        return max(dims) if dims else 0
+
+    def _run(self, pred: Predictor, feats: np.ndarray
+             ) -> tuple[np.ndarray, np.ndarray]:
+        score, raw = pred.score_with_raw(feats)
+        return np.asarray(score), np.asarray(raw)
+
+    def score(self, request: ScoringRequest) -> ScoringResponse:
+        return self.score_batch([request])[0]
+
+    def score_batch(self, requests: list[ScoringRequest]) -> list[ScoringResponse]:
+        """Scores a batch sharing one intent-resolution each; groups by live
+        predictor so a single executable call serves the group."""
+        t0 = time.perf_counter()
+        resolutions = [self.routing.resolve(r.intent) for r in requests]
+        by_live: dict[str, list[int]] = {}
+        for i, res in enumerate(resolutions):
+            by_live.setdefault(res.live, []).append(i)
+
+        responses: list[ScoringResponse | None] = [None] * len(requests)
+        for live_name, idxs in by_live.items():
+            pred = self.predictors[live_name]
+            dim = self._model_dim(pred) or len(requests[idxs[0]].features)
+            feats = np.stack([
+                self.features.enrich(requests[i].intent, requests[i].features, dim)
+                for i in idxs
+            ])
+            scores, raws = self._run(pred, feats)
+            latency_ms = (time.perf_counter() - t0) * 1000.0
+            for j, i in enumerate(idxs):
+                responses[i] = ScoringResponse(
+                    request_id=requests[i].request_id,
+                    score=float(scores[j]),
+                    predictor=live_name,
+                    routing_version=self.routing.version,
+                    latency_ms=latency_ms,
+                    raw_scores=tuple(float(x) for x in np.atleast_1d(raws[j])),
+                )
+            self._track_quantiles(requests, idxs, raws, pred, live_name)
+
+        # shadow evaluations (never affect the response)
+        self._run_shadows(requests, resolutions)
+        self.metrics["requests"] += len(requests)
+        return responses  # type: ignore[return-value]
+
+    def _track_quantiles(self, requests, idxs, raws, pred: Predictor,
+                         live_name: str) -> None:
+        if not self.config.track_quantiles:
+            return
+        # Track the T^Q INPUT distribution: the posterior-corrected weighted
+        # aggregate — fitting a refreshed T^Q on raw means would mismatch
+        # the pipeline (the bug class the paper's Sec.-3.1 update avoids).
+        import jax.numpy as jnp
+        agg = np.asarray(pred.pipeline.pre_quantile(jnp.atleast_2d(
+            np.asarray(raws, np.float32))))
+        for j, i in enumerate(idxs):
+            key = (requests[i].intent.tenant, live_name)
+            est = self._estimators.get(key)
+            if est is None:
+                import zlib
+                est = StreamingQuantileEstimator(
+                    self.config.quantile_capacity,
+                    seed=zlib.crc32("/".join(key).encode()))
+                self._estimators[key] = est
+            est.update(np.asarray([agg[j]]))
+
+    def _run_shadows(self, requests, resolutions) -> None:
+        by_shadow: dict[str, list[int]] = {}
+        for i, res in enumerate(resolutions):
+            for s in res.shadows:
+                by_shadow.setdefault(s, []).append(i)
+        for shadow_name, idxs in by_shadow.items():
+            pred = self.predictors[shadow_name]
+            dim = self._model_dim(pred) or len(requests[idxs[0]].features)
+            feats = np.stack([
+                self.features.enrich(requests[i].intent, requests[i].features, dim)
+                for i in idxs
+            ])
+            scores, raws = self._run(pred, feats)
+            for j, i in enumerate(idxs):
+                self.sink.write(ShadowRecord(
+                    request_id=requests[i].request_id,
+                    tenant=requests[i].intent.tenant,
+                    predictor=shadow_name,
+                    score=float(scores[j]),
+                    raw_scores=tuple(float(x) for x in np.atleast_1d(raws[j])),
+                    routing_version=self.routing.version,
+                ))
+                self.metrics["shadow_evals"] += 1
+
+    # --------------------------------------------------------------- refresh
+    def calibration_ready(self, tenant: str, predictor: str) -> bool:
+        """Eq. 5 gate: enough live events for a trustworthy custom T^Q?"""
+        est = self._estimators.get((tenant, predictor))
+        return est is not None and est.ready(
+            self.config.refresh_alert_rate, self.config.refresh_rel_error
+        )
+
+    def fit_custom_quantile_map(self, tenant: str, predictor: str,
+                                ref_quantiles, n_levels: int = 256) -> QuantileMap:
+        """Refresh path: fit T^Q_v1 from the live (unlabeled) score stream."""
+        import jax.numpy as jnp
+        est = self._estimators[(tenant, predictor)]
+        levels = np.linspace(0.0, 1.0, n_levels)
+        src = est.quantiles(levels)
+        return QuantileMap(
+            src_quantiles=jnp.asarray(src, jnp.float32),
+            ref_quantiles=jnp.asarray(np.asarray(ref_quantiles), jnp.float32),
+        )

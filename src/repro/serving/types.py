@@ -1,0 +1,42 @@
+"""Serving-layer value objects."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.routing import Intent
+
+_req_counter = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoringRequest:
+    intent: Intent
+    features: np.ndarray                      # (dim,) raw client payload
+    request_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+    metadata: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoringResponse:
+    request_id: int
+    score: float                              # business-ready (post T^Q)
+    predictor: str
+    routing_version: str
+    latency_ms: float
+    raw_scores: tuple[float, ...] = ()        # per-expert raw scores (debug)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShadowRecord:
+    """What lands in the data lake for each shadow evaluation."""
+
+    request_id: int
+    tenant: str
+    predictor: str
+    score: float
+    raw_scores: tuple[float, ...]
+    routing_version: str

@@ -1,0 +1,88 @@
+"""Checkpointing: pytree <-> flat .npz + orjson metadata (no orbax offline).
+
+Layout:  <dir>/<step>/arrays.npz  +  <dir>/<step>/meta.json
+Leaves are addressed by '/'-joined pytree key paths, restored into the same
+structure, so any params/opt-state/cache pytree round-trips exactly.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+import orjson
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree,
+                    metadata: dict | None = None) -> str:
+    path = os.path.join(directory, str(step))
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    # npz can't serialize ml_dtypes (bf16 etc.) — store raw bits + dtype map.
+    dtypes: dict[str, str] = {}
+    storable = {}
+    for key, arr in flat.items():
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict:
+            arr = arr.view(np.uint8 if arr.dtype.itemsize == 1 else
+                           np.uint16 if arr.dtype.itemsize == 2 else np.uint32)
+        storable[key] = arr
+    np.savez(os.path.join(path, "arrays.npz"), **storable)
+    meta = {"step": step, "dtypes": dtypes, **(metadata or {})}
+    with open(os.path.join(path, "meta.json"), "wb") as f:
+        f.write(orjson.dumps(meta))
+    return path
+
+
+def restore_checkpoint(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+    path = os.path.join(directory, str(step))
+    with np.load(os.path.join(path, "arrays.npz")) as npz:
+        arrays = dict(npz)
+    meta = load_metadata(directory, step)
+    dtypes = meta.get("dtypes", {})
+    paths_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths_like:
+        key = "/".join(_path_str(x) for x in p)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        stored_dtype = dtypes.get(key)
+        if stored_dtype and str(arr.dtype) != stored_dtype:
+            arr = arr.view(jax.numpy.dtype(stored_dtype))  # undo raw-bit view
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_metadata(directory: str, step: int) -> dict:
+    with open(os.path.join(directory, str(step), "meta.json"), "rb") as f:
+        return orjson.loads(f.read())
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d) for d in os.listdir(directory) if d.isdigit()]
+    return max(steps) if steps else None

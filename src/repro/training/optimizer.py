@@ -1,0 +1,96 @@
+"""AdamW + schedules, pure JAX (no optax dependency in this environment).
+
+Optimizer state is a pytree mirroring the params, so pjit shards it with the
+same rules as the parameters (ZeRO-style: moments inherit param shardings).
+``moment_dtype`` allows bf16 first/second moments — the memory optimization
+recorded in EXPERIMENTS.md §Perf for the 400B-class models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: Array     # () int32
+    mu: PyTree      # first moments
+    nu: PyTree      # second moments
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float | Callable[[Array], Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+    def init(self, params: PyTree) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, step: Array) -> Array:
+        if callable(self.learning_rate):
+            return jnp.asarray(self.learning_rate(step), jnp.float32)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree
+               ) -> tuple[PyTree, AdamWState]:
+        step = state.step + 1
+        # global-norm clipping
+        if self.grad_clip_norm > 0:
+            gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads))
+            gnorm = jnp.sqrt(gsq)
+            scale = jnp.minimum(1.0, self.grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32)
+                          + (1 - b1) * g.astype(jnp.float32)).astype(self.moment_dtype),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32)
+                          + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                          ).astype(self.moment_dtype),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v.astype(jnp.float32) / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay > 0 and p.ndim >= 2:  # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1) -> Callable[[Array], Array]:
+    def lr(step: Array) -> Array:
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr

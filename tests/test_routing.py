@@ -1,0 +1,129 @@
+"""Tests for intent-based routing (paper Sec. 2.5, Fig. 2)."""
+import pytest
+
+from repro.core.routing import (
+    Condition,
+    Intent,
+    NoMatchingRule,
+    RoutingTable,
+    ScoringRule,
+    ShadowRule,
+)
+
+
+def fig2_table() -> RoutingTable:
+    """The exact declarative config of the paper's Figure 2."""
+    return RoutingTable.from_dict(
+        {
+            "routing": {
+                "scoringRules": [
+                    {
+                        "description": "Custom DAG for bank1",
+                        "condition": {"tenants": ["bank1"]},
+                        "targetPredictorName": "bank1-predictor-v1",
+                    },
+                    {
+                        "description": "Custom DAG for tenants in US or LATAM, using schema v1",
+                        "condition": {
+                            "geographies": ["NAMER", "LATAM"],
+                            "schemas": ["fraud_v1"],
+                        },
+                        "targetPredictorName": "america-predictor-v1",
+                    },
+                    {
+                        "description": "Default DAG for cold start clients",
+                        "condition": {},
+                        "targetPredictorName": "global-predictor-v3",
+                    },
+                ],
+                "shadowRules": [
+                    {
+                        "description": "Evaluate predictor v2 in shadow mode for bank1",
+                        "condition": {"tenants": ["bank1"]},
+                        "targetPredictorNames": ["bank1-predictor-v2"],
+                    }
+                ],
+            }
+        },
+        version="fig2",
+    )
+
+
+class TestFig2Semantics:
+    def test_bank1_live_plus_shadow(self):
+        res = fig2_table().resolve(Intent(tenant="bank1"))
+        assert res.live == "bank1-predictor-v1"
+        assert res.shadows == ("bank1-predictor-v2",)
+
+    def test_geography_and_schema_conjunction(self):
+        t = fig2_table()
+        res = t.resolve(Intent(tenant="bankX", geography="NAMER", schema="fraud_v1"))
+        assert res.live == "america-predictor-v1"
+        # schema mismatch -> falls through to catch-all
+        res2 = t.resolve(Intent(tenant="bankX", geography="NAMER", schema="fraud_v2"))
+        assert res2.live == "global-predictor-v3"
+
+    def test_catch_all_cold_start(self):
+        res = fig2_table().resolve(Intent(tenant="brand-new-client"))
+        assert res.live == "global-predictor-v3"
+        assert res.shadows == ()
+
+    def test_sequential_first_match_wins(self):
+        # bank1 in NAMER with fraud_v1 still hits the bank1 rule (rule order).
+        res = fig2_table().resolve(
+            Intent(tenant="bank1", geography="NAMER", schema="fraud_v1")
+        )
+        assert res.live == "bank1-predictor-v1"
+
+
+class TestRoutingMechanics:
+    def test_no_match_raises(self):
+        t = RoutingTable(
+            scoring_rules=(
+                ScoringRule(Condition(tenants=("a",)), "p-a"),
+            )
+        )
+        with pytest.raises(NoMatchingRule):
+            t.resolve(Intent(tenant="b"))
+
+    def test_multiple_shadow_rules_all_fire(self):
+        t = RoutingTable(
+            scoring_rules=(ScoringRule(Condition(), "live-p"),),
+            shadow_rules=(
+                ShadowRule(Condition(), ("s1", "s2")),
+                ShadowRule(Condition(tenants=("t",)), ("s3",)),
+                ShadowRule(Condition(tenants=("other",)), ("s4",)),
+            ),
+        )
+        res = t.resolve(Intent(tenant="t"))
+        assert res.shadows == ("s1", "s2", "s3")
+
+    def test_live_excluded_from_shadows(self):
+        t = RoutingTable(
+            scoring_rules=(ScoringRule(Condition(), "p"),),
+            shadow_rules=(ShadowRule(Condition(), ("p", "q")),),
+        )
+        assert t.resolve(Intent(tenant="x")).shadows == ("q",)
+
+    def test_extra_fields_condition(self):
+        cond = Condition.from_dict({"channels": ["card"], "customField": ["v"]})
+        assert cond.matches(Intent(tenant="t", channel="card", extra={"customField": "v"}))
+        assert not cond.matches(Intent(tenant="t", channel="card"))
+
+    def test_transparent_model_switching(self):
+        """Promotion = routing-table value update; intents never change."""
+        t = fig2_table()
+        t2 = t.with_rule_update("bank1-predictor-v1", "bank1-predictor-v2", "fig2+promo")
+        intent = Intent(tenant="bank1")
+        assert t.resolve(intent).live == "bank1-predictor-v1"   # old table intact
+        assert t2.resolve(intent).live == "bank1-predictor-v2"  # new table promoted
+        assert t2.version == "fig2+promo"
+
+    def test_referenced_predictors(self):
+        names = fig2_table().referenced_predictors()
+        assert set(names) == {
+            "bank1-predictor-v1",
+            "america-predictor-v1",
+            "global-predictor-v3",
+            "bank1-predictor-v2",
+        }

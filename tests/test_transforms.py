@@ -1,0 +1,224 @@
+"""Unit + property tests for the composable transformations (paper Sec. 2.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import transforms
+from repro.core.transforms import (
+    Aggregation,
+    PosteriorCorrection,
+    QuantileMap,
+    posterior_correction,
+    posterior_correction_inverse,
+    quantile_map,
+    score_pipeline,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# Posterior correction (Eq. 3)
+# ---------------------------------------------------------------------------
+
+class TestPosteriorCorrection:
+    def test_fixes_endpoints(self):
+        y = jnp.array([0.0, 1.0])
+        out = posterior_correction(y, 0.2)
+        np.testing.assert_allclose(out, [0.0, 1.0], atol=1e-7)
+
+    def test_identity_when_beta_one(self):
+        y = jnp.linspace(0, 1, 11)
+        np.testing.assert_allclose(posterior_correction(y, 1.0), y, atol=1e-7)
+
+    def test_shrinks_scores_for_undersampled_models(self):
+        # beta < 1 (majority class undersampled) inflates raw scores;
+        # the correction must deflate them.
+        y = jnp.array([0.5, 0.9])
+        out = posterior_correction(y, 0.1)
+        assert (np.asarray(out) < np.asarray(y)).all()
+
+    def test_matches_paper_formula(self):
+        y, beta = 0.7, 0.18
+        expected = beta * y / (1 - (1 - beta) * y)
+        np.testing.assert_allclose(posterior_correction(jnp.float32(y), beta),
+                                   expected, rtol=1e-6)
+
+    def test_roundtrip_with_inverse(self):
+        y = jnp.linspace(0.01, 0.99, 23)
+        for beta in (0.02, 0.18, 0.5):
+            biased = posterior_correction_inverse(y, beta)
+            np.testing.assert_allclose(posterior_correction(biased, beta), y,
+                                       rtol=1e-5, atol=1e-6)
+
+    @given(
+        y=st.floats(0.0, 1.0),
+        beta=st.floats(0.01, 1.0),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_property_output_in_unit_interval_and_monotone(self, y, beta):
+        out = float(posterior_correction(jnp.float32(y), beta))
+        assert -1e-6 <= out <= 1 + 1e-6
+        # monotone: slightly larger input -> >= output
+        y2 = min(1.0, y + 1e-3)
+        out2 = float(posterior_correction(jnp.float32(y2), beta))
+        assert out2 >= out - 1e-5
+
+    def test_exact_prior_shift_inversion(self):
+        """T^C exactly inverts the Bayes-rule prior shift from undersampling.
+
+        If p is the true posterior with prior pi, undersampling negatives at
+        rate beta yields posterior p' = p / (p + beta (1-p)).  Eq. 3 must map
+        p' back to p.
+        """
+        rng = np.random.default_rng(0)
+        p = rng.uniform(0.001, 0.999, size=256).astype(np.float32)
+        for beta in (0.02, 0.18):
+            p_biased = p / (p + beta * (1 - p))
+            rec = np.asarray(posterior_correction(jnp.asarray(p_biased), beta))
+            np.testing.assert_allclose(rec, p, rtol=2e-4, atol=2e-5)
+
+    def test_node_identity(self):
+        node = PosteriorCorrection.identity()
+        y = jnp.linspace(0, 1, 7)
+        np.testing.assert_allclose(node(y), y, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation (Sec. 2.3.2)
+# ---------------------------------------------------------------------------
+
+class TestAggregation:
+    def test_uniform_average(self):
+        agg = Aggregation.uniform(4)
+        scores = jnp.array([[0.1, 0.2, 0.3, 0.4]])
+        np.testing.assert_allclose(agg(scores), [0.25], rtol=1e-6)
+
+    def test_weights_self_normalize(self):
+        agg = Aggregation(weights=jnp.array([2.0, 2.0]))
+        scores = jnp.array([0.0, 1.0])
+        np.testing.assert_allclose(agg(scores), 0.5, rtol=1e-6)
+
+    def test_degenerate_weight_selects_expert(self):
+        agg = Aggregation(weights=jnp.array([0.0, 1.0, 0.0]))
+        scores = jnp.array([0.9, 0.3, 0.8])
+        np.testing.assert_allclose(agg(scores), 0.3, rtol=1e-6)
+
+    def test_batched(self):
+        agg = Aggregation(weights=jnp.array([1.0, 3.0]))
+        scores = jnp.ones((5, 7, 2)) * jnp.array([0.0, 1.0])
+        np.testing.assert_allclose(agg(scores), np.full((5, 7), 0.75), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Quantile mapping (Eq. 4)
+# ---------------------------------------------------------------------------
+
+def _gaussian_quantiles(n, mu, sigma):
+    from scipy import stats
+    levels = np.linspace(0.001, 0.999, n)
+    return levels, stats.norm.ppf(levels, mu, sigma)
+
+
+class TestQuantileMap:
+    def test_identity_map(self):
+        qm = QuantileMap.identity(32)
+        y = jnp.linspace(0, 1, 17)
+        np.testing.assert_allclose(qm(y), y, atol=1e-6)
+
+    def test_matches_paper_interpolation_formula(self):
+        qs = jnp.array([0.0, 0.5, 1.0])
+        qr = jnp.array([0.0, 0.25, 1.0])
+        y = 0.25  # in [q0, q1): out = 0 + (0.25-0)*(0.25-0)/(0.5-0) = 0.125
+        np.testing.assert_allclose(quantile_map(jnp.float32(y), qs, qr), 0.125,
+                                   rtol=1e-6)
+
+    def test_monotonicity_preserves_ranking(self):
+        """The paper's key invariant: ranking (hence recall) unchanged."""
+        rng = np.random.default_rng(1)
+        src = np.sort(rng.beta(2, 5, 64)).astype(np.float32)
+        ref = np.sort(rng.beta(0.8, 8, 64)).astype(np.float32)
+        y = jnp.asarray(np.sort(rng.uniform(0, 1, 1000)).astype(np.float32))
+        out = np.asarray(quantile_map(y, jnp.asarray(src), jnp.asarray(ref)))
+        assert (np.diff(out) >= -1e-6).all()
+
+    def test_distribution_alignment(self):
+        """Mapping samples of S through T^Q yields the R distribution."""
+        rng = np.random.default_rng(2)
+        s_samples = rng.beta(5, 2, 200_000)
+        levels = np.linspace(0, 1, 257)
+        src_q = np.quantile(s_samples, levels)
+        from scipy import stats
+        ref_q = stats.beta.ppf(levels, 0.8, 8.0)
+        mapped = np.asarray(
+            quantile_map(jnp.asarray(s_samples, jnp.float32),
+                         jnp.asarray(src_q, jnp.float32),
+                         jnp.asarray(ref_q, jnp.float32))
+        )
+        # Kolmogorov–Smirnov distance between mapped samples and target R
+        ks = stats.kstest(mapped, lambda x: stats.beta.cdf(x, 0.8, 8.0)).statistic
+        assert ks < 0.01, f"KS distance too large: {ks}"
+
+    def test_out_of_range_clipped_to_reference_support(self):
+        qs = jnp.array([0.2, 0.5, 0.8])
+        qr = jnp.array([0.1, 0.5, 0.9])
+        out = quantile_map(jnp.array([0.0, 1.0]), qs, qr)
+        assert float(out[0]) >= 0.1 - 1e-6
+        assert float(out[1]) <= 0.9 + 1e-6
+
+    def test_fit_from_samples(self):
+        rng = np.random.default_rng(3)
+        samples = rng.beta(2, 8, 50_000)
+        ref = jnp.linspace(0, 1, 128)
+        qm = QuantileMap.fit(samples, ref)
+        mapped = np.asarray(qm(jnp.asarray(samples, jnp.float32)))
+        # mapped distribution should be ~uniform
+        hist, _ = np.histogram(mapped, bins=10, range=(0, 1))
+        props = hist / len(mapped)
+        np.testing.assert_allclose(props, 0.1, atol=0.02)
+
+    @given(st.integers(3, 200), st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_property_monotone_any_tables(self, n, seed):
+        rng = np.random.default_rng(seed)
+        src = np.sort(rng.uniform(0, 1, n)).astype(np.float32)
+        ref = np.sort(rng.uniform(0, 1, n)).astype(np.float32)
+        y = np.sort(rng.uniform(0, 1, 100)).astype(np.float32)
+        out = np.asarray(quantile_map(jnp.asarray(y), jnp.asarray(src), jnp.asarray(ref)))
+        assert (np.diff(out) >= -1e-5).all()
+        assert (out >= ref[0] - 1e-6).all() and (out <= ref[-1] + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Full Eq. 2 pipeline
+# ---------------------------------------------------------------------------
+
+class TestScorePipeline:
+    def test_composition_matches_stagewise(self):
+        rng = np.random.default_rng(4)
+        raw = jnp.asarray(rng.uniform(0, 1, (32, 3)).astype(np.float32))
+        betas = jnp.array([0.18, 0.18, 0.02])
+        weights = jnp.array([1.0, 1.0, 2.0])
+        qs = jnp.asarray(np.sort(rng.uniform(0, 1, 64)).astype(np.float32))
+        qr = jnp.asarray(np.sort(rng.uniform(0, 1, 64)).astype(np.float32))
+
+        fused = score_pipeline(raw, betas, weights, qs, qr)
+
+        stage = posterior_correction(raw, betas)
+        stage = Aggregation(weights)(stage)
+        stage = quantile_map(stage, qs, qr)
+        np.testing.assert_allclose(fused, stage, rtol=1e-6, atol=1e-7)
+
+    def test_jit_and_grad_compatible(self):
+        # The pipeline must live inside jitted serving steps.
+        raw = jnp.full((8, 2), 0.5)
+        betas = jnp.array([0.2, 0.3])
+        weights = jnp.array([1.0, 1.0])
+        qs = jnp.linspace(0, 1, 16)
+        qr = jnp.linspace(0, 1, 16) ** 2
+        f = jax.jit(score_pipeline)
+        out = f(raw, betas, weights, qs, qr)
+        assert out.shape == (8,)
+        assert not np.isnan(np.asarray(out)).any()
