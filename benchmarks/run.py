@@ -85,6 +85,15 @@ def main() -> None:
          f"events_per_s_b256={r['batch_256']['events_per_s']:.0f};"
          f"transform_share_pct={r['transform_share_of_path_pct']:.2f}")
 
+    # ---- mixed-tenant banked batch vs per-predictor loop --------------------
+    from benchmarks import bench_multitenant_batch
+    r = bench_multitenant_batch.run(quick=quick)
+    _csv("multitenant_batch", r["us_banked"],
+         f"kernel_speedup={r['kernel_speedup']:.1f}x;"
+         f"events_per_s_banked={r['events_per_s_banked']:.0f};"
+         f"quantile_update_speedup={r['quantile_update_speedup']:.1f}x;"
+         f"max_abs_err={r['max_abs_err_vs_oracle']:.2e}")
+
     # ---- kernels -------------------------------------------------------------
     t0 = time.perf_counter()
     from benchmarks import bench_kernels

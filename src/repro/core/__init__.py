@@ -13,6 +13,8 @@ from repro.core.transforms import (
     Aggregation,
     PosteriorCorrection,
     QuantileMap,
+    TransformBank,
+    banked_score_pipeline,
     posterior_correction,
     quantile_map,
     score_pipeline,
@@ -22,8 +24,9 @@ from repro.core.routing import Condition, Intent, Resolution, RoutingTable, Scor
 from repro.core.registry import ModelPool
 
 __all__ = [
-    "Aggregation", "PosteriorCorrection", "QuantileMap",
-    "posterior_correction", "quantile_map", "score_pipeline",
+    "Aggregation", "PosteriorCorrection", "QuantileMap", "TransformBank",
+    "banked_score_pipeline", "posterior_correction", "quantile_map",
+    "score_pipeline",
     "Predictor", "PredictorSpec", "TransformPipeline", "deploy_predictor",
     "Condition", "Intent", "Resolution", "RoutingTable", "ScoringRule", "ShadowRule",
     "ModelPool",

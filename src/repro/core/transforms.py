@@ -234,3 +234,127 @@ def score_pipeline(
     w = weights / jnp.sum(weights)
     agg = jnp.einsum("...k,k->...", corrected, w)
     return quantile_map(agg, src_quantiles, ref_quantiles)
+
+
+# ---------------------------------------------------------------------------
+# Tenant-indexed transform bank (mixed-tenant batched Eq. 2)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TransformBank:
+    """Stacked per-(tenant, predictor) transform parameters.
+
+    One row per distinct post-model pipeline; a mixed-tenant micro-batch
+    carries a per-row ``tenant_idx`` selecting its bank row, so the whole
+    batch runs Eq. 2 in ONE dispatch (``kernels/score_pipeline.py::
+    score_pipeline_banked``) instead of a Python loop of per-predictor calls.
+    This is MUSE's multi-tenant reuse made literal on the serving hot path.
+    """
+
+    betas: Array          # (T, K)
+    weights: Array        # (T, K)
+    src_quantiles: Array  # (T, N)
+    ref_quantiles: Array  # (T, N)
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.betas.shape[0])
+
+    @property
+    def num_experts(self) -> int:
+        return int(self.betas.shape[-1])
+
+    @property
+    def num_quantiles(self) -> int:
+        return int(self.src_quantiles.shape[-1])
+
+    def __call__(self, expert_scores: Array, tenant_idx: Array) -> Array:
+        return banked_score_pipeline(
+            expert_scores, tenant_idx, self.betas, self.weights,
+            self.src_quantiles, self.ref_quantiles,
+        )
+
+    def pre_quantile(self, expert_scores: Array, tenant_idx: Array) -> Array:
+        """Per-row T^Q input (corrected weighted aggregate) — what a
+        refreshed T^Q must be fitted on; see TransformPipeline.pre_quantile."""
+        tenant_idx = jnp.asarray(tenant_idx, jnp.int32)
+        betas = jnp.take(self.betas, tenant_idx, axis=0)      # (B, K)
+        weights = jnp.take(self.weights, tenant_idx, axis=0)  # (B, K)
+        corrected = posterior_correction(expert_scores, betas)
+        w = weights / jnp.sum(weights, axis=-1, keepdims=True)
+        return jnp.sum(corrected * w, axis=-1)
+
+    @staticmethod
+    def from_params(params: Sequence[tuple[Array, Array, Array, Array]]
+                    ) -> "TransformBank":
+        """Stack (betas, weights, src_q, ref_q) rows, padding ragged axes.
+
+        Expert axes are padded with ``beta=1, weight=0`` columns (identity
+        correction, zero aggregation mass).  Quantile tables are padded by
+        repeating the last knot: the extra flat segments are degenerate
+        (guarded denominator) and values past the true support already clip
+        to the reference edge, so padding is semantics-preserving.
+        """
+        if not params:
+            raise ValueError("cannot build an empty TransformBank")
+        rows = [(jnp.atleast_1d(jnp.asarray(b, jnp.float32)),
+                 jnp.atleast_1d(jnp.asarray(w, jnp.float32)),
+                 jnp.asarray(qs, jnp.float32), jnp.asarray(qr, jnp.float32))
+                for b, w, qs, qr in params]
+        k_max = max(b.shape[-1] for b, _, _, _ in rows)
+        n_max = max(qs.shape[-1] for _, _, qs, _ in rows)
+
+        def _pad_k(x, fill):
+            pad = k_max - x.shape[-1]
+            return jnp.pad(x, (0, pad), constant_values=fill) if pad else x
+
+        def _pad_n(x):
+            pad = n_max - x.shape[-1]
+            return jnp.pad(x, (0, pad), mode="edge") if pad else x
+
+        return TransformBank(
+            betas=jnp.stack([_pad_k(b, 1.0) for b, _, _, _ in rows]),
+            weights=jnp.stack([_pad_k(w, 0.0) for _, w, _, _ in rows]),
+            src_quantiles=jnp.stack([_pad_n(qs) for _, _, qs, _ in rows]),
+            ref_quantiles=jnp.stack([_pad_n(qr) for _, _, _, qr in rows]),
+        )
+
+
+def banked_score_pipeline(
+    expert_scores: Array,
+    tenant_idx: Array,
+    betas: Array,
+    weights: Array,
+    src_quantiles: Array,
+    ref_quantiles: Array,
+) -> Array:
+    """Mixed-tenant Eq. 2: row ``i`` uses parameter row ``tenant_idx[i]``.
+
+    ``expert_scores``: (..., K); ``tenant_idx``: (...) int; bank params are
+    (T, K) / (T, N).  Pure-jnp reference — the oracle for the banked Pallas
+    kernel.  Weights are normalized per row (so padded expert columns with
+    weight 0 contribute nothing).
+    """
+    expert_scores = jnp.asarray(expert_scores)
+    tenant_idx = jnp.asarray(tenant_idx, jnp.int32)
+    b = jnp.take(betas, tenant_idx, axis=0)            # (..., K)
+    w = jnp.take(weights, tenant_idx, axis=0)          # (..., K)
+    qs = jnp.take(src_quantiles, tenant_idx, axis=0)   # (..., N)
+    qr = jnp.take(ref_quantiles, tenant_idx, axis=0)   # (..., N)
+    corrected = posterior_correction(expert_scores, b)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    agg = jnp.sum(corrected * w, axis=-1)              # (...)
+
+    dtype = agg.dtype
+    qs = qs.astype(dtype)
+    qr = qr.astype(dtype)
+    n = qs.shape[-1]
+    i = jnp.clip(jnp.sum(agg[..., None] >= qs, axis=-1) - 1, 0, n - 2)
+    q_s_i = jnp.take_along_axis(qs, i[..., None], axis=-1)[..., 0]
+    q_s_n = jnp.take_along_axis(qs, i[..., None] + 1, axis=-1)[..., 0]
+    q_r_i = jnp.take_along_axis(qr, i[..., None], axis=-1)[..., 0]
+    q_r_n = jnp.take_along_axis(qr, i[..., None] + 1, axis=-1)[..., 0]
+    denom = jnp.where(q_s_n - q_s_i > 0, q_s_n - q_s_i, jnp.asarray(1.0, dtype))
+    out = q_r_i + (agg - q_s_i) * (q_r_n - q_r_i) / denom
+    return jnp.clip(out, qr[..., 0], qr[..., -1])

@@ -1,0 +1,71 @@
+"""Compatibility shims for jax APIs that moved between releases.
+
+The repo targets the newest jax surface (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``) but must also
+run on jax 0.4.x, where shard_map lives in ``jax.experimental`` (with
+``check_rep`` instead of ``check_vma``), meshes are activated purely via the
+``with mesh:`` context, and there are no axis types.  Every call site goes
+through this module instead of feature-testing jax inline.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh
+
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+
+
+def make_mesh(axis_shapes: tuple[int, ...], axis_names: tuple[str, ...],
+              *, auto_axes: bool = True) -> Mesh:
+    """``jax.make_mesh`` with AxisType.Auto where supported, plain otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if auto_axes and axis_type is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager activating ``mesh`` for sharding-aware tracing.
+
+    On new jax this is ``jax.set_mesh``; on 0.4.x the ``with mesh:`` physical
+    context (which call sites already enter) is the only mechanism, so this
+    degrades to a no-op.
+    """
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext(mesh)
+
+
+def get_active_mesh() -> Any:
+    """The mesh in scope for the current trace (abstract or physical)."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        mesh = getter()
+        if mesh is not None and getattr(mesh, "axis_names", ()):
+            return mesh
+    from jax._src import mesh as _mesh_src  # 0.4.x fallback
+    return _mesh_src.thread_resources.env.physical_mesh
+
+
+def shard_map(f: Callable | None = None, *, mesh: Any, in_specs: Any,
+              out_specs: Any, check_vma: bool = True) -> Callable:
+    """``jax.shard_map`` when available, else the experimental one.
+
+    The replication-checking kwarg was renamed ``check_rep`` -> ``check_vma``;
+    we accept the new name and translate.
+    """
+    impl = getattr(jax, "shard_map", None)
+    if impl is not None:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+    else:
+        from jax.experimental.shard_map import shard_map as impl  # noqa: N813
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+    if f is None:
+        return lambda fn: impl(fn, **kwargs)
+    return impl(f, **kwargs)

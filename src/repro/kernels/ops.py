@@ -39,6 +39,18 @@ def score_pipeline(expert_scores: Array, betas: Array, weights: Array,
     )
 
 
+def score_pipeline_banked(expert_scores: Array, tenant_idx: Array,
+                          betas: Array, weights: Array,
+                          src_quantiles: Array, ref_quantiles: Array,
+                          *, block: int = _sp.DEFAULT_BLOCK,
+                          interpret: bool | None = None) -> Array:
+    return _sp.score_pipeline_banked(
+        expert_scores, tenant_idx, betas, weights, src_quantiles,
+        ref_quantiles, block=block,
+        interpret=_INTERPRET if interpret is None else interpret,
+    )
+
+
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                     sliding_window: int = 0, block_q: int = 128,
                     block_k: int = 128, interpret: bool | None = None) -> Array:

@@ -29,6 +29,18 @@ def score_pipeline(expert_scores: Array, betas: Array, weights: Array,
 
 
 # ---------------------------------------------------------------------------
+# banked (tenant-indexed) score pipeline — oracle =
+# core.transforms.banked_score_pipeline
+# ---------------------------------------------------------------------------
+
+def score_pipeline_banked(expert_scores: Array, tenant_idx: Array,
+                          betas: Array, weights: Array,
+                          src_q: Array, ref_q: Array) -> Array:
+    from repro.core.transforms import banked_score_pipeline as _bsp
+    return _bsp(expert_scores, tenant_idx, betas, weights, src_q, ref_q)
+
+
+# ---------------------------------------------------------------------------
 # flash attention (GQA, causal / sliding window)
 # ---------------------------------------------------------------------------
 

@@ -1,4 +1,4 @@
-"""Fused Pallas kernel for the full Eq. 2 post-model pipeline:
+"""Fused Pallas kernels for the full Eq. 2 post-model pipeline:
 
     T^Q( A( [T^C_k(y_k)]_k ) )   —  posterior correction -> weighted
                                      aggregation -> quantile map
@@ -8,6 +8,17 @@ the correction is elementwise, the aggregation a (BLOCK,K)x(K,) matvec, and
 the quantile map reuses the branchless compare-and-sum + one-hot-matmul
 lookup of kernels/quantile_map.py.  This kernel IS the paper's transformation
 DAG as a single fused op — the serving hot path for every scored event.
+
+Two entry points:
+
+  * :func:`score_pipeline`        — one shared (betas, weights, q-tables)
+                                    parameter set for the whole batch.
+  * :func:`score_pipeline_banked` — tenant-indexed: parameters are (T, ·)
+                                    banks and each row carries a
+                                    ``tenant_idx`` gathered INSIDE the kernel
+                                    (one-hot matmuls on the MXU), so a single
+                                    ``pallas_call`` scores a mixed-tenant
+                                    micro-batch.
 """
 from __future__ import annotations
 
@@ -20,6 +31,15 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 DEFAULT_BLOCK = 1024
+
+
+def _round_block(n: int, block: int) -> int:
+    """Next power of two >= n, capped at ``block`` — bounds the number of
+    distinct (block,) jit specializations the serving layer can trigger."""
+    b = 1
+    while b < min(n, block):
+        b *= 2
+    return min(b, block)
 
 
 def _score_pipeline_kernel(scores_ref, betas_ref, weights_ref, src_ref,
@@ -84,4 +104,91 @@ def score_pipeline(expert_scores: Array, betas: Array, weights: Array,
         out_shape=jax.ShapeDtypeStruct((total,), expert_scores.dtype),
         interpret=interpret,
     )(flat, betas, weights, src_quantiles, ref_quantiles)
+    return out[:n].reshape(batch_shape)
+
+
+def _score_pipeline_banked_kernel(scores_ref, idx_ref, betas_ref, weights_ref,
+                                  src_ref, ref_ref, out_ref):
+    y = scores_ref[...].astype(jnp.float32)          # (BLOCK, K)
+    tid = idx_ref[...].astype(jnp.int32)             # (BLOCK,)
+    t = betas_ref.shape[0]
+
+    # --- gather this row's (tenant, predictor) parameters from the bank.
+    # A one-hot (BLOCK, T) matmul against each (T, ·) bank keeps the gather
+    # dense (MXU-friendly) — no data-dependent addressing inside the kernel.
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (y.shape[0], t), 1)
+    sel = (iota_t == tid[:, None]).astype(jnp.float32)          # (BLOCK, T)
+    beta = sel @ betas_ref[...].astype(jnp.float32)             # (BLOCK, K)
+    w = sel @ weights_ref[...].astype(jnp.float32)              # (BLOCK, K)
+    qs = sel @ src_ref[...].astype(jnp.float32)                 # (BLOCK, N)
+    qr = sel @ ref_ref[...].astype(jnp.float32)                 # (BLOCK, N)
+
+    # --- T^C: per-row posterior correction (Eq. 3)
+    corrected = beta * y / (1.0 - (1.0 - beta) * y)
+
+    # --- A: per-row self-normalizing weighted average
+    w_norm = w / jnp.sum(w, axis=-1, keepdims=True)
+    agg = jnp.sum(corrected * w_norm, axis=-1)                  # (BLOCK,)
+
+    # --- T^Q: branchless quantile map against per-row tables (Eq. 4)
+    n = qs.shape[-1]
+    ge = (agg[:, None] >= qs).astype(jnp.float32)
+    idx = jnp.clip(jnp.sum(ge, axis=-1) - 1.0, 0.0, n - 2.0)
+    iota_n = jax.lax.broadcasted_iota(jnp.float32, (agg.shape[0], n), 1)
+    onehot_i = (iota_n == idx[:, None]).astype(jnp.float32)
+    onehot_ip1 = (iota_n == (idx + 1.0)[:, None]).astype(jnp.float32)
+    q_s_i = jnp.sum(onehot_i * qs, axis=-1)
+    q_s_n = jnp.sum(onehot_ip1 * qs, axis=-1)
+    q_r_i = jnp.sum(onehot_i * qr, axis=-1)
+    q_r_n = jnp.sum(onehot_ip1 * qr, axis=-1)
+    denom = jnp.where(q_s_n - q_s_i > 0, q_s_n - q_s_i, 1.0)
+    out = q_r_i + (agg - q_s_i) * (q_r_n - q_r_i) / denom
+    out_ref[...] = jnp.clip(out, qr[:, 0], qr[:, -1]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def score_pipeline_banked(expert_scores: Array, tenant_idx: Array,
+                          betas: Array, weights: Array,
+                          src_quantiles: Array, ref_quantiles: Array,
+                          *, block: int = DEFAULT_BLOCK,
+                          interpret: bool = True) -> Array:
+    """Mixed-tenant Eq. 2 in ONE ``pallas_call``.
+
+    ``expert_scores``: (..., K) raw scores; ``tenant_idx``: (...) int32 row
+    index into the (T, K) / (T, N) parameter banks.  Every grid step keeps
+    the full banks resident in VMEM (T·(2K+2N)·4 bytes — ~130 KB for a
+    64-tenant bank with N=256) and gathers per-row parameters in-kernel, so
+    a mixed-tenant micro-batch costs one dispatch instead of T.
+    """
+    *batch_shape, k = expert_scores.shape
+    flat = expert_scores.reshape(-1, k)
+    idx_flat = jnp.asarray(tenant_idx, jnp.int32).reshape(-1)
+    if idx_flat.shape[0] != flat.shape[0]:
+        raise ValueError(
+            f"tenant_idx has {idx_flat.shape[0]} rows for "
+            f"{flat.shape[0]} score rows")
+    n = flat.shape[0]
+    block = _round_block(max(n, 1), block)
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+        idx_flat = jnp.pad(idx_flat, (0, pad))  # row 0 params; sliced off
+    total = flat.shape[0]
+    t, nq = src_quantiles.shape
+
+    out = pl.pallas_call(
+        _score_pipeline_banked_kernel,
+        grid=(total // block,),
+        in_specs=[
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((t, k), lambda i: (0, 0)),
+            pl.BlockSpec((t, k), lambda i: (0, 0)),
+            pl.BlockSpec((t, nq), lambda i: (0, 0)),
+            pl.BlockSpec((t, nq), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((total,), expert_scores.dtype),
+        interpret=interpret,
+    )(flat, idx_flat, betas, weights, src_quantiles, ref_quantiles)
     return out[:n].reshape(batch_shape)

@@ -1,12 +1,12 @@
 """Serving runtime: the MUSE data plane + rollout control plane."""
-from repro.serving.batching import MicroBatcher
+from repro.serving.batching import MicroBatcher, ServerBatcher
 from repro.serving.rollout import Replica, ReplicaSet, RollingUpdate
 from repro.serving.server import FeatureStore, MuseServer, ServerConfig
 from repro.serving.shadow import ShadowSink
 from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
 
 __all__ = [
-    "MicroBatcher", "Replica", "ReplicaSet", "RollingUpdate",
+    "MicroBatcher", "ServerBatcher", "Replica", "ReplicaSet", "RollingUpdate",
     "FeatureStore", "MuseServer", "ServerConfig", "ShadowSink",
     "ScoringRequest", "ScoringResponse", "ShadowRecord",
 ]

@@ -1,18 +1,22 @@
-"""Micro-batching: group in-flight requests per resolved predictor.
+"""Micro-batching: group in-flight requests per model group.
 
 The serving layer is stateless (paper design principle #1); the batcher is a
-per-replica, in-memory accumulation window — requests are grouped by their
-resolved live predictor so one jitted executable call serves many tenants
-(multi-tenancy & reuse, principle #2).
+per-replica, in-memory accumulation window.  Requests are grouped by the
+*model group* of their resolved live predictor (``MuseServer.batch_key``) —
+NOT per predictor — so one accumulated window spans every tenant/predictor
+that shares an expert-model set, and its flush lands in
+``MuseServer.score_batch``'s banked path as a single model executable call
+plus a single tenant-indexed kernel dispatch (multi-tenancy & reuse,
+principle #2).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Callable
+from typing import Any, Callable
 
-from repro.serving.types import ScoringRequest
+from repro.serving.types import ScoringRequest, ScoringResponse
 
 
 @dataclasses.dataclass
@@ -61,3 +65,47 @@ class MicroBatcher:
     @property
     def pending_count(self) -> int:
         return sum(len(v) for v in self._pending.values())
+
+
+@dataclasses.dataclass
+class ServerBatcher:
+    """Glue between :class:`MicroBatcher` and the server's banked data path.
+
+    Keys every request by ``server.batch_key`` (the resolved predictor's
+    model group) and flushes full or aged-out windows straight into
+    ``server.score_batch`` — which scores each window with one banked kernel
+    dispatch regardless of how many tenants it mixes.
+
+    ``server`` is any object with ``batch_key(intent)`` and
+    ``score_batch(requests)`` (duck-typed to avoid a serving<->server import
+    cycle).
+    """
+
+    server: Any
+    batcher: MicroBatcher = dataclasses.field(default_factory=MicroBatcher)
+
+    def submit(self, request: ScoringRequest) -> list[ScoringResponse] | None:
+        """Enqueue; returns responses if this request filled its window."""
+        key = self.server.batch_key(request.intent)
+        batch = self.batcher.add(key, request)
+        if batch is not None:
+            return self.server.score_batch(batch)
+        return None
+
+    def poll(self) -> list[ScoringResponse]:
+        """Flush aged-out windows (call from the serving loop's timer)."""
+        out: list[ScoringResponse] = []
+        for _, batch in self.batcher.expired():
+            out.extend(self.server.score_batch(batch))
+        return out
+
+    def drain(self) -> list[ScoringResponse]:
+        """Flush everything pending (shutdown / test epilogue)."""
+        out: list[ScoringResponse] = []
+        for _, batch in self.batcher.flush_all():
+            out.extend(self.server.score_batch(batch))
+        return out
+
+    @property
+    def pending_count(self) -> int:
+        return self.batcher.pending_count

@@ -3,6 +3,12 @@
 Request path:  intent -> routing (live + shadows) -> feature enrichment ->
 expert models -> T^C -> A -> T^Q -> response; shadow scores go to the sink.
 
+A mixed-tenant micro-batch is grouped by *model group* (the predictor's
+expert-model set): one model executable call produces raw scores for the
+whole group, and one tenant-indexed banked kernel dispatch
+(:func:`repro.kernels.ops.score_pipeline_banked`) applies every predictor's
+T^C/A/T^Q in a single ``pallas_call`` — no per-predictor Python loop.
+
 The server is the *data plane*; control-plane operations (deploying
 predictors, publishing routing tables, triggering calibration refreshes) are
 explicit methods invoked by the rollout controller — never by clients.
@@ -11,15 +17,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 from typing import Any, Callable, Mapping
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.predictor import Predictor, PredictorSpec, deploy_predictor
 from repro.core.quantiles import StreamingQuantileEstimator, required_sample_size
 from repro.core.registry import ModelPool
 from repro.core.routing import Intent, RoutingTable
-from repro.core.transforms import QuantileMap
+from repro.core.transforms import QuantileMap, TransformBank
+from repro.kernels import ops
 from repro.serving.shadow import ShadowSink
 from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
 
@@ -60,6 +69,9 @@ class ServerConfig:
     quantile_capacity: int = 131072
     refresh_alert_rate: float = 0.01   # Eq. 5 gating for auto-refresh readiness
     refresh_rel_error: float = 0.2
+    # fused tenant-indexed Pallas dispatch; False falls back to the pure-jnp
+    # banked oracle (same semantics, no pallas_call)
+    fused_kernel: bool = True
 
 
 class MuseServer:
@@ -73,7 +85,12 @@ class MuseServer:
         self.config = config or ServerConfig()
         # per (tenant, predictor) streaming estimators for calibration refresh
         self._estimators: dict[tuple[str, str], StreamingQuantileEstimator] = {}
-        self.metrics: dict[str, float] = {"requests": 0, "shadow_evals": 0}
+        # model-group transform banks, keyed by ordered predictor names.
+        # Values keep the source pipelines so identity checks detect swaps.
+        self._banks: dict[tuple[str, ...],
+                          tuple[tuple[Any, ...], TransformBank]] = {}
+        self.metrics: dict[str, float] = {
+            "requests": 0, "shadow_evals": 0, "kernel_dispatches": 0}
 
     # ------------------------------------------------------------------ control
     def deploy(self, spec: PredictorSpec,
@@ -86,6 +103,8 @@ class MuseServer:
     def decommission(self, name: str) -> None:
         pred = self.predictors.pop(name)
         pred.release(self.pool)
+        # drop cached banks referencing the dead predictor's pipeline
+        self._banks = {k: v for k, v in self._banks.items() if name not in k}
 
     def publish_routing(self, table: RoutingTable) -> None:
         """Atomic routing swap — the transparent model switching primitive."""
@@ -108,88 +127,140 @@ class MuseServer:
         dims = [d for d in dims if d]
         return max(dims) if dims else 0
 
-    def _run(self, pred: Predictor, feats: np.ndarray
-             ) -> tuple[np.ndarray, np.ndarray]:
-        score, raw = pred.score_with_raw(feats)
-        return np.asarray(score), np.asarray(raw)
+    def batch_key(self, intent: Intent) -> str:
+        """Micro-batching key: the resolved predictor's model group.
+
+        Requests from different tenants/predictors that share the same
+        expert-model set batch together — one executable call plus one
+        banked kernel dispatch serves the whole window."""
+        pred = self.predictors[self.routing.resolve(intent).live]
+        return "+".join(pred.model_names)
+
+    def _bank_for(self, names: tuple[str, ...]) -> TransformBank:
+        """Build (or fetch) the stacked transform bank for these predictors.
+
+        Cache entries pin the source pipelines; a ``swap_transformation`` /
+        redeploy replaces the pipeline object, failing the identity check
+        and rebuilding the bank — banks never serve stale parameters."""
+        pipelines = tuple(self.predictors[n].pipeline for n in names)
+        cached = self._banks.get(names)
+        if cached is not None and len(cached[0]) == len(pipelines) and all(
+                a is b for a, b in zip(cached[0], pipelines)):
+            return cached[1]
+        bank = TransformBank.from_params([
+            (p.betas, p.weights, p.src_quantiles, p.ref_quantiles)
+            for p in pipelines
+        ])
+        self._banks[names] = (pipelines, bank)
+        return bank
 
     def score(self, request: ScoringRequest) -> ScoringResponse:
         return self.score_batch([request])[0]
 
     def score_batch(self, requests: list[ScoringRequest]) -> list[ScoringResponse]:
-        """Scores a batch sharing one intent-resolution each; groups by live
-        predictor so a single executable call serves the group."""
-        t0 = time.perf_counter()
+        """Scores a mixed-tenant batch: requests are grouped by model group
+        (shared expert-model set); each group costs one model executable
+        call plus ONE tenant-indexed banked kernel dispatch, whatever mix of
+        tenants and predictors the group contains."""
         resolutions = [self.routing.resolve(r.intent) for r in requests]
-        by_live: dict[str, list[int]] = {}
+        by_group: dict[tuple[str, ...], list[int]] = {}
         for i, res in enumerate(resolutions):
-            by_live.setdefault(res.live, []).append(i)
+            key = self.predictors[res.live].model_names
+            by_group.setdefault(key, []).append(i)
 
         responses: list[ScoringResponse | None] = [None] * len(requests)
-        for live_name, idxs in by_live.items():
-            pred = self.predictors[live_name]
-            dim = self._model_dim(pred) or len(requests[idxs[0]].features)
-            feats = np.stack([
-                self.features.enrich(requests[i].intent, requests[i].features, dim)
-                for i in idxs
-            ])
-            scores, raws = self._run(pred, feats)
+        for idxs in by_group.values():
+            t0 = time.perf_counter()  # per-dispatch latency, not cumulative
+            pred_names = [resolutions[i].live for i in idxs]
+            scores, raws, bank, tenant_idx = self._dispatch_banked(
+                requests, idxs, pred_names)
             latency_ms = (time.perf_counter() - t0) * 1000.0
             for j, i in enumerate(idxs):
                 responses[i] = ScoringResponse(
                     request_id=requests[i].request_id,
                     score=float(scores[j]),
-                    predictor=live_name,
+                    predictor=pred_names[j],
                     routing_version=self.routing.version,
                     latency_ms=latency_ms,
                     raw_scores=tuple(float(x) for x in np.atleast_1d(raws[j])),
                 )
-            self._track_quantiles(requests, idxs, raws, pred, live_name)
+            self._track_quantiles(requests, idxs, pred_names, raws, bank,
+                                  tenant_idx)
 
         # shadow evaluations (never affect the response)
         self._run_shadows(requests, resolutions)
         self.metrics["requests"] += len(requests)
         return responses  # type: ignore[return-value]
 
-    def _track_quantiles(self, requests, idxs, raws, pred: Predictor,
-                         live_name: str) -> None:
+    def _dispatch_banked(
+        self, requests, idxs: list[int], pred_names: list[str],
+    ) -> tuple[np.ndarray, np.ndarray, TransformBank, np.ndarray]:
+        """One model-group dispatch: raw scores from the shared expert models,
+        then the whole (possibly multi-predictor) group through one banked
+        kernel call.  ``pred_names[j]`` is the predictor for row ``j``."""
+        bank_names = tuple(sorted(set(pred_names)))  # canonical cache key
+        bank = self._bank_for(bank_names)
+        row_of = {n: r for r, n in enumerate(bank_names)}
+        pred0 = self.predictors[bank_names[0]]
+        dim = self._model_dim(pred0) or len(requests[idxs[0]].features)
+        feats = np.stack([
+            self.features.enrich(requests[i].intent, requests[i].features, dim)
+            for i in idxs
+        ])
+        raws = pred0.raw_scores(feats)                       # (B, K)
+        tenant_idx = np.asarray([row_of[n] for n in pred_names], np.int32)
+        if self.config.fused_kernel:
+            scores = ops.score_pipeline_banked(
+                jnp.asarray(raws, jnp.float32), jnp.asarray(tenant_idx),
+                bank.betas, bank.weights,
+                bank.src_quantiles, bank.ref_quantiles)
+        else:
+            scores = bank(jnp.asarray(raws, jnp.float32),
+                          jnp.asarray(tenant_idx))
+        self.metrics["kernel_dispatches"] += 1
+        return np.asarray(scores), np.asarray(raws), bank, tenant_idx
+
+    def _track_quantiles(self, requests, idxs, pred_names, raws,
+                         bank: TransformBank, tenant_idx) -> None:
         if not self.config.track_quantiles:
             return
         # Track the T^Q INPUT distribution: the posterior-corrected weighted
         # aggregate — fitting a refreshed T^Q on raw means would mismatch
         # the pipeline (the bug class the paper's Sec.-3.1 update avoids).
-        import jax.numpy as jnp
-        agg = np.asarray(pred.pipeline.pre_quantile(jnp.atleast_2d(
-            np.asarray(raws, np.float32))))
+        agg = np.asarray(bank.pre_quantile(
+            jnp.asarray(raws, jnp.float32), jnp.asarray(tenant_idx)))
+        by_stream: dict[tuple[str, str], list[int]] = {}
         for j, i in enumerate(idxs):
-            key = (requests[i].intent.tenant, live_name)
+            key = (requests[i].intent.tenant, pred_names[j])
+            by_stream.setdefault(key, []).append(j)
+        # one batched reservoir update per (tenant, predictor) stream
+        for key, rows in by_stream.items():
             est = self._estimators.get(key)
             if est is None:
-                import zlib
                 est = StreamingQuantileEstimator(
                     self.config.quantile_capacity,
                     seed=zlib.crc32("/".join(key).encode()))
                 self._estimators[key] = est
-            est.update(np.asarray([agg[j]]))
+            est.update(agg[rows])
 
     def _run_shadows(self, requests, resolutions) -> None:
-        by_shadow: dict[str, list[int]] = {}
+        # shadow rows are (request, shadow-predictor) pairs, grouped by the
+        # shadow's model group and dispatched through the same banked path
+        by_group: dict[tuple[str, ...], tuple[list[int], list[str]]] = {}
         for i, res in enumerate(resolutions):
             for s in res.shadows:
-                by_shadow.setdefault(s, []).append(i)
-        for shadow_name, idxs in by_shadow.items():
-            pred = self.predictors[shadow_name]
-            dim = self._model_dim(pred) or len(requests[idxs[0]].features)
-            feats = np.stack([
-                self.features.enrich(requests[i].intent, requests[i].features, dim)
-                for i in idxs
-            ])
-            scores, raws = self._run(pred, feats)
+                key = self.predictors[s].model_names
+                idxs, names = by_group.setdefault(key, ([], []))
+                idxs.append(i)
+                names.append(s)
+        for idxs, shadow_names in by_group.values():
+            scores, raws, _, _ = self._dispatch_banked(
+                requests, idxs, shadow_names)
             for j, i in enumerate(idxs):
                 self.sink.write(ShadowRecord(
                     request_id=requests[i].request_id,
                     tenant=requests[i].intent.tenant,
-                    predictor=shadow_name,
+                    predictor=shadow_names[j],
                     score=float(scores[j]),
                     raw_scores=tuple(float(x) for x in np.atleast_1d(raws[j])),
                     routing_version=self.routing.version,

@@ -6,14 +6,31 @@ structure, so any params/opt-state/cache pytree round-trips exactly.
 """
 from __future__ import annotations
 
+import json
 import os
 from typing import Any
 
 import jax
 import numpy as np
-import orjson
+
+try:
+    import orjson
+except ModuleNotFoundError:  # stdlib json fallback — same bytes-in/bytes-out
+    orjson = None
 
 PyTree = Any
+
+
+def _json_dumps(obj: Any) -> bytes:
+    if orjson is not None:
+        return orjson.dumps(obj)
+    return json.dumps(obj).encode()
+
+
+def _json_loads(data: bytes) -> Any:
+    if orjson is not None:
+        return orjson.loads(data)
+    return json.loads(data.decode())
 
 
 def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
@@ -51,7 +68,7 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
     np.savez(os.path.join(path, "arrays.npz"), **storable)
     meta = {"step": step, "dtypes": dtypes, **(metadata or {})}
     with open(os.path.join(path, "meta.json"), "wb") as f:
-        f.write(orjson.dumps(meta))
+        f.write(_json_dumps(meta))
     return path
 
 
@@ -78,7 +95,7 @@ def restore_checkpoint(directory: str, step: int, like: PyTree) -> PyTree:
 
 def load_metadata(directory: str, step: int) -> dict:
     with open(os.path.join(directory, str(step), "meta.json"), "rb") as f:
-        return orjson.loads(f.read())
+        return _json_loads(f.read())
 
 
 def latest_step(directory: str) -> int | None:

@@ -1,0 +1,122 @@
+"""Deterministic fallback for `hypothesis` when it is not installed.
+
+The CI image does not ship `hypothesis`; rather than skip the five
+property-test modules wholesale, install a miniature deterministic stand-in
+exposing exactly the API subset the suite uses: ``given``, ``settings`` and
+``strategies.{integers, floats, booleans, sampled_from, lists}``.  Each
+``@given`` test runs a bounded seeded sweep of drawn examples (boundary
+values first), so the properties are still exercised — just without
+shrinking or the full example budget.  When the real hypothesis is
+importable it is used untouched.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+try:
+    import hypothesis  # noqa: F401  (real library wins when present)
+except ModuleNotFoundError:
+    # Examples per @given test. Enough to hit every boundary value plus a
+    # seeded random sweep while keeping suite runtime close to the seed's.
+    _MAX_EXAMPLES_CAP = 12
+
+    class _Strategy:
+        """A draw rule plus the boundary examples emitted first."""
+
+        def __init__(self, draw, edges=()):
+            self.draw = draw
+            self._edges = tuple(edges)
+
+        def example(self, rng: random.Random, i: int):
+            if i < len(self._edges):
+                return self._edges[i]
+            return self.draw(rng)
+
+    def _integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         edges=(min_value, max_value))
+
+    def _floats(min_value: float, max_value: float, **_: object) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                         edges=(min_value, max_value))
+
+    def _booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5, edges=(False, True))
+
+    def _sampled_from(elements) -> _Strategy:
+        pool = list(elements)
+        return _Strategy(lambda rng: rng.choice(pool), edges=pool[:2])
+
+    def _lists(elements: _Strategy, *, min_size: int = 0,
+               max_size: int | None = None, unique: bool = False) -> _Strategy:
+        def draw(rng: random.Random):
+            hi = max_size if max_size is not None else min_size + 5
+            size = rng.randint(min_size, hi)
+            out: list = []
+            for _ in range(100):
+                if len(out) >= size:
+                    break
+                v = elements.draw(rng)
+                if unique and v in out:
+                    continue
+                out.append(v)
+            return out
+
+        return _Strategy(draw)
+
+    def _settings(**kwargs):
+        def decorate(func):
+            func._mini_hypothesis_settings = dict(kwargs)
+            return func
+
+        return decorate
+
+    def _given(*pos_strategies, **kw_strategies):
+        def decorate(func):
+            conf = getattr(func, "_mini_hypothesis_settings", {})
+            n_examples = min(conf.get("max_examples", _MAX_EXAMPLES_CAP),
+                             _MAX_EXAMPLES_CAP)
+            sig = inspect.signature(func)
+            mapping = dict(kw_strategies)
+            if pos_strategies:
+                # hypothesis semantics: positional strategies fill the test's
+                # parameters from the right (after self / fixtures).
+                free = [n for n in sig.parameters if n not in mapping]
+                mapping.update(zip(free[-len(pos_strategies):], pos_strategies))
+            remaining = [p for n, p in sig.parameters.items()
+                         if n not in mapping]
+
+            @functools.wraps(func)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(zlib.crc32(func.__qualname__.encode()))
+                for i in range(n_examples):
+                    drawn = {n: s.example(rng, i) for n, s in mapping.items()}
+                    func(*args, **{**kwargs, **drawn})
+
+            # pytest must see only the non-strategy params (fixtures/self);
+            # drop the wraps-installed __wrapped__ so nothing unwraps back to
+            # the full strategy-bearing signature.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            return wrapper
+
+        return decorate
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _st.sampled_from = _sampled_from
+    _st.lists = _lists
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.assume = lambda condition: bool(condition)
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,0 +1,322 @@
+"""Mixed-tenant banked score pipeline: kernel/oracle parity + serving path.
+
+The banked kernel must match the per-tenant ``core/transforms.py::
+score_pipeline`` oracle row-for-row on batches spanning many tenants with
+distinct betas / weights / quantile maps — including degenerate (flat)
+source segments, scores outside the fitted support, and single-tenant banks.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.predictor import PredictorSpec
+from repro.core.routing import Condition, Intent, RoutingTable, ScoringRule
+from repro.core.transforms import (
+    QuantileMap,
+    TransformBank,
+    banked_score_pipeline,
+    score_pipeline,
+)
+from repro.kernels import ops
+from repro.serving.batching import MicroBatcher, ServerBatcher
+from repro.serving.server import MuseServer, ServerConfig
+from repro.serving.types import ScoringRequest
+
+TOL = 1e-5
+
+
+def _random_bank(rng, t, k, n):
+    betas = rng.uniform(0.05, 1.0, (t, k)).astype(np.float32)
+    weights = rng.uniform(0.1, 2.0, (t, k)).astype(np.float32)
+    src = np.sort(rng.uniform(0.0, 1.0, (t, n)), axis=-1).astype(np.float32)
+    ref = np.sort(rng.uniform(0.0, 1.0, (t, n)), axis=-1).astype(np.float32)
+    return TransformBank(
+        betas=jnp.asarray(betas), weights=jnp.asarray(weights),
+        src_quantiles=jnp.asarray(src), ref_quantiles=jnp.asarray(ref),
+    )
+
+
+def _per_tenant_oracle(bank, scores, tid):
+    """Row-by-row reference through the SINGLE-tenant Eq. 2 oracle."""
+    out = np.empty(scores.shape[0], np.float32)
+    tid = np.asarray(tid)
+    for t in np.unique(tid):
+        m = tid == t
+        out[m] = np.asarray(score_pipeline(
+            jnp.asarray(scores[m]), bank.betas[t], bank.weights[t],
+            bank.src_quantiles[t], bank.ref_quantiles[t]))
+    return out
+
+
+class TestBankedKernelParity:
+    @pytest.mark.parametrize("t,k,n,b", [(3, 2, 32, 97), (8, 4, 64, 1000),
+                                         (64, 4, 256, 2048)])
+    def test_mixed_tenant_matches_per_tenant_oracles(self, t, k, n, b):
+        rng = np.random.default_rng(t * 1000 + b)
+        bank = _random_bank(rng, t, k, n)
+        scores = rng.uniform(0.0, 1.0, (b, k)).astype(np.float32)
+        tid = rng.integers(0, t, b).astype(np.int32)
+
+        got = np.asarray(ops.score_pipeline_banked(
+            jnp.asarray(scores), jnp.asarray(tid), bank.betas, bank.weights,
+            bank.src_quantiles, bank.ref_quantiles))
+        np.testing.assert_allclose(got, _per_tenant_oracle(bank, scores, tid),
+                                   atol=TOL, rtol=TOL)
+        # and the pure-jnp banked oracle agrees with the kernel too
+        np.testing.assert_allclose(
+            got, np.asarray(bank(jnp.asarray(scores), jnp.asarray(tid))),
+            atol=TOL, rtol=TOL)
+
+    def test_flat_source_segments(self):
+        """Repeated source knots (degenerate segments) must not divide by 0
+        and must still match the per-tenant oracle."""
+        rng = np.random.default_rng(7)
+        t, k, n, b = 4, 3, 16, 512
+        bank = _random_bank(rng, t, k, n)
+        src = np.array(bank.src_quantiles)
+        src[:, 4:9] = src[:, 4:5]         # 5-knot plateau in every tenant
+        src[1, :] = 0.5                   # tenant 1: fully degenerate table
+        bank = TransformBank(
+            betas=bank.betas, weights=bank.weights,
+            src_quantiles=jnp.asarray(src), ref_quantiles=bank.ref_quantiles)
+        scores = rng.uniform(0.0, 1.0, (b, k)).astype(np.float32)
+        tid = rng.integers(0, t, b).astype(np.int32)
+        got = np.asarray(ops.score_pipeline_banked(
+            jnp.asarray(scores), jnp.asarray(tid), bank.betas, bank.weights,
+            bank.src_quantiles, bank.ref_quantiles))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got, _per_tenant_oracle(bank, scores, tid),
+                                   atol=TOL, rtol=TOL)
+
+    def test_scores_outside_fitted_support(self):
+        """Aggregates left/right of [q^S_1, q^S_N] clip to the ref support."""
+        rng = np.random.default_rng(11)
+        t, k, n = 3, 2, 32
+        betas = jnp.ones((t, k), jnp.float32)          # identity T^C
+        weights = jnp.ones((t, k), jnp.float32)
+        src = np.sort(rng.uniform(0.4, 0.6, (t, n)), axis=-1).astype(np.float32)
+        ref = np.sort(rng.uniform(0.2, 0.8, (t, n)), axis=-1).astype(np.float32)
+        bank = TransformBank(betas=betas, weights=weights,
+                             src_quantiles=jnp.asarray(src),
+                             ref_quantiles=jnp.asarray(ref))
+        # aggregates far below and above every tenant's source support
+        scores = np.concatenate([np.full((64, k), 0.01, np.float32),
+                                 np.full((64, k), 0.99, np.float32)])
+        tid = np.tile(np.arange(t, dtype=np.int32), 128 // t + 1)[:128]
+        got = np.asarray(ops.score_pipeline_banked(
+            jnp.asarray(scores), jnp.asarray(tid), bank.betas, bank.weights,
+            bank.src_quantiles, bank.ref_quantiles))
+        np.testing.assert_allclose(got, _per_tenant_oracle(bank, scores, tid),
+                                   atol=TOL, rtol=TOL)
+        lo = ref[tid, 0]
+        hi = ref[tid, -1]
+        assert (got >= lo - TOL).all() and (got <= hi + TOL).all()
+        np.testing.assert_allclose(got[:64], lo[:64], atol=TOL)
+        np.testing.assert_allclose(got[64:], hi[64:], atol=TOL)
+
+    def test_single_tenant_bank(self):
+        rng = np.random.default_rng(3)
+        bank = _random_bank(rng, 1, 4, 64)
+        scores = rng.uniform(0.0, 1.0, (33, 4)).astype(np.float32)
+        tid = np.zeros(33, np.int32)
+        got = np.asarray(ops.score_pipeline_banked(
+            jnp.asarray(scores), jnp.asarray(tid), bank.betas, bank.weights,
+            bank.src_quantiles, bank.ref_quantiles))
+        want = np.asarray(score_pipeline(
+            jnp.asarray(scores), bank.betas[0], bank.weights[0],
+            bank.src_quantiles[0], bank.ref_quantiles[0]))
+        np.testing.assert_allclose(got, want, atol=TOL, rtol=TOL)
+
+    def test_tenant_idx_length_mismatch_raises(self):
+        bank = _random_bank(np.random.default_rng(0), 2, 2, 8)
+        with pytest.raises(ValueError):
+            ops.score_pipeline_banked(
+                jnp.zeros((4, 2)), jnp.zeros((3,), jnp.int32), bank.betas,
+                bank.weights, bank.src_quantiles, bank.ref_quantiles)
+
+
+class TestFromParams:
+    def test_ragged_expert_and_quantile_axes_pad_exactly(self):
+        """Rows with fewer experts / knots pad with identity columns and
+        edge-repeated knots — padded rows score identically to unpadded."""
+        rng = np.random.default_rng(5)
+        q8 = QuantileMap(
+            src_quantiles=jnp.asarray(np.sort(rng.uniform(0, 1, 8)), jnp.float32),
+            ref_quantiles=jnp.asarray(np.sort(rng.uniform(0, 1, 8)), jnp.float32))
+        q16 = QuantileMap(
+            src_quantiles=jnp.asarray(np.sort(rng.uniform(0, 1, 16)), jnp.float32),
+            ref_quantiles=jnp.asarray(np.sort(rng.uniform(0, 1, 16)), jnp.float32))
+        params = [
+            (jnp.asarray([0.2, 0.5]), jnp.asarray([1.0, 3.0]),
+             q8.src_quantiles, q8.ref_quantiles),
+            (jnp.asarray([0.9]), jnp.asarray([2.0]),
+             q16.src_quantiles, q16.ref_quantiles),
+        ]
+        bank = TransformBank.from_params(params)
+        assert bank.num_rows == 2
+        assert bank.num_experts == 2
+        assert bank.num_quantiles == 16
+
+        scores2 = rng.uniform(0, 1, (50, 2)).astype(np.float32)
+        want0 = np.asarray(score_pipeline(
+            jnp.asarray(scores2), params[0][0], params[0][1],
+            q8.src_quantiles, q8.ref_quantiles))
+        got0 = np.asarray(banked_score_pipeline(
+            jnp.asarray(scores2), jnp.zeros(50, jnp.int32), bank.betas,
+            bank.weights, bank.src_quantiles, bank.ref_quantiles))
+        np.testing.assert_allclose(got0, want0, atol=TOL, rtol=TOL)
+
+        # single-expert row: padded column has weight 0, so column 1 is inert
+        want1 = np.asarray(score_pipeline(
+            jnp.asarray(scores2[:, :1]), params[1][0], params[1][1],
+            q16.src_quantiles, q16.ref_quantiles))
+        got1 = np.asarray(banked_score_pipeline(
+            jnp.asarray(scores2), jnp.ones(50, jnp.int32), bank.betas,
+            bank.weights, bank.src_quantiles, bank.ref_quantiles))
+        np.testing.assert_allclose(got1, want1, atol=TOL, rtol=TOL)
+
+    def test_empty_raises(self):
+        with pytest.raises(ValueError):
+            TransformBank.from_params([])
+
+
+# ---------------------------------------------------------------------------
+# Serving-path integration: mixed-tenant batches through MuseServer
+# ---------------------------------------------------------------------------
+
+DIM = 8
+
+
+def _linear_model(seed: int, dim: int = DIM):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 1, dim).astype(np.float32)
+
+    def score(x):
+        x = np.asarray(x, np.float32)
+        return jnp.asarray(1.0 / (1.0 + np.exp(-(x @ w))))
+
+    return score
+
+
+def _qm(seed: int, n: int = 32) -> QuantileMap:
+    rng = np.random.default_rng(seed)
+    return QuantileMap(
+        src_quantiles=jnp.asarray(np.sort(rng.uniform(0, 1, n)), jnp.float32),
+        ref_quantiles=jnp.asarray(np.sort(rng.uniform(0, 1, n)), jnp.float32))
+
+
+def _mixed_server(**cfg) -> MuseServer:
+    """3 tenants -> 3 predictors; a/b share a model group, c has its own."""
+    rules = (ScoringRule(Condition(tenants=("ta",)), "p-a"),
+             ScoringRule(Condition(tenants=("tb",)), "p-b"),
+             ScoringRule(Condition(), "p-c"))
+    server = MuseServer(RoutingTable(rules, version="v1"),
+                        ServerConfig(**cfg))
+    factories = {"m1": lambda: _linear_model(1), "m2": lambda: _linear_model(2),
+                 "m3": lambda: _linear_model(3)}
+    server.deploy(PredictorSpec("p-a", ("m1", "m2"), (0.2, 0.4), (1.0, 2.0),
+                                _qm(10)), factories)
+    server.deploy(PredictorSpec("p-b", ("m1", "m2"), (0.5, 0.9), (3.0, 1.0),
+                                _qm(20)), factories)
+    server.deploy(PredictorSpec.single("p-c", "m3", _qm(30)), factories)
+    return server
+
+
+def _req(tenant, seed):
+    rng = np.random.default_rng(seed)
+    return ScoringRequest(intent=Intent(tenant=tenant),
+                          features=rng.normal(0, 1, DIM).astype(np.float32))
+
+
+class TestServerBankedPath:
+    def test_mixed_batch_one_dispatch_per_model_group(self):
+        server = _mixed_server()
+        reqs = ([_req("ta", i) for i in range(4)]
+                + [_req("tb", 10 + i) for i in range(4)]
+                + [_req("tc", 20 + i) for i in range(4)])
+        before = server.metrics["kernel_dispatches"]
+        resps = server.score_batch(reqs)
+        # p-a + p-b share {m1,m2} -> one dispatch; p-c -> one dispatch
+        assert server.metrics["kernel_dispatches"] - before == 2
+        assert [r.predictor for r in resps] == (["p-a"] * 4 + ["p-b"] * 4
+                                                + ["p-c"] * 4)
+
+    def test_mixed_batch_matches_singleton_scoring(self):
+        """Fused mixed-tenant scores == scoring each request alone."""
+        server = _mixed_server()
+        reqs = [_req(t, 100 + i) for i, t in enumerate(
+            ["ta", "tb", "tc", "tb", "ta", "ta", "tc", "tb"])]
+        batch_scores = [r.score for r in server.score_batch(reqs)]
+        solo = _mixed_server()
+        solo_scores = [solo.score(r).score for r in reqs]
+        np.testing.assert_allclose(batch_scores, solo_scores, atol=TOL)
+
+    def test_fused_kernel_matches_jnp_fallback(self):
+        reqs = [_req(t, 40 + i) for i, t in enumerate(["ta", "tb", "tc"] * 5)]
+        fused = _mixed_server(fused_kernel=True).score_batch(reqs)
+        plain = _mixed_server(fused_kernel=False).score_batch(reqs)
+        np.testing.assert_allclose([r.score for r in fused],
+                                   [r.score for r in plain], atol=TOL)
+
+    def test_latency_measured_per_dispatch(self):
+        """Group latencies are per-dispatch: rows of one group share one
+        measurement, and no response carries the batch-cumulative time."""
+        server = _mixed_server()
+        reqs = [_req("ta", 1), _req("tb", 2), _req("tc", 3)]
+        resps = server.score_batch(reqs)
+        # ta/tb share a dispatch -> identical latency; sum of distinct
+        # group latencies can't exceed ~the whole batch wall time, so no
+        # group accumulated another group's measurement window.
+        assert resps[0].latency_ms == resps[1].latency_ms
+        assert resps[0].latency_ms > 0 and resps[2].latency_ms > 0
+
+    def test_swap_transformation_invalidates_bank(self):
+        server = _mixed_server()
+        req = _req("ta", 5)
+        s0 = server.score(req).score
+        qs = jnp.linspace(0, 1, 32)
+        server.swap_transformation("p-a", QuantileMap(qs, qs ** 3))
+        s1 = server.score(req).score
+        assert s0 != pytest.approx(s1, abs=1e-9)
+
+    def test_quantile_tracking_batched_per_stream(self):
+        server = _mixed_server()
+        reqs = [_req("ta", i) for i in range(16)] + [_req("tb", i + 50)
+                                                     for i in range(16)]
+        server.score_batch(reqs)
+        assert server._estimators[("ta", "p-a")].count == 16
+        assert server._estimators[("tb", "p-b")].count == 16
+
+
+class TestServerBatcherWiring:
+    def test_mixed_tenants_fill_one_model_group_window(self):
+        server = _mixed_server()
+        sb = ServerBatcher(server, MicroBatcher(max_batch=4, max_wait_ms=1e9))
+        before = server.metrics["kernel_dispatches"]
+        assert sb.submit(_req("ta", 0)) is None
+        assert sb.submit(_req("tb", 1)) is None
+        assert sb.submit(_req("ta", 2)) is None
+        resps = sb.submit(_req("tb", 3))     # fills the {m1,m2} window
+        assert resps is not None and len(resps) == 4
+        assert server.metrics["kernel_dispatches"] - before == 1
+        assert sb.pending_count == 0
+
+    def test_drain_flushes_remaining_mixed_window(self):
+        server = _mixed_server()
+        sb = ServerBatcher(server, MicroBatcher(max_batch=64, max_wait_ms=1e9))
+        for i, t in enumerate(["ta", "tb", "tc", "ta"]):
+            assert sb.submit(_req(t, i)) is None
+        resps = sb.drain()
+        assert len(resps) == 4
+        assert {r.predictor for r in resps} == {"p-a", "p-b", "p-c"}
+
+    def test_age_trigger_via_poll(self):
+        t = [0.0]
+        server = _mixed_server()
+        sb = ServerBatcher(server, MicroBatcher(max_batch=100, max_wait_ms=5.0,
+                                                clock=lambda: t[0]))
+        sb.submit(_req("ta", 0))
+        assert sb.poll() == []
+        t[0] = 0.01
+        resps = sb.poll()
+        assert len(resps) == 1 and resps[0].predictor == "p-a"
