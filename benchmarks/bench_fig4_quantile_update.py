@@ -8,8 +8,16 @@ traffic against the target (reference) distribution, per score bin:
                   scores) — bounded low-bin error, drifts in high bins;
   predictor v1  — custom client-specific T^Q_v1 fit on live traffic —
                   restores alignment.
+
+Also benchmarks the FLEET-WIDE refresh path (``run_refresh``): the
+CalibrationController refits every ready (tenant, predictor) stream and
+publishes one atomic transform-bank generation; wall time is reported vs.
+tenant count (the paper's "swap T^Q in minutes, fleet-wide" claim, here
+milliseconds at 64+ tenants).
 """
 from __future__ import annotations
+
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -19,6 +27,91 @@ from repro.core.transforms import quantile_map
 from repro.experiments.fraud_world import FraudWorld
 
 ENSEMBLE = tuple(f"m{i+1}" for i in range(8))
+
+
+def _fleet_server(n_tenants: int, n_samples: int, rng: np.random.Generator):
+    """A server with one predictor per tenant (shared 2-model group), a
+    warm T-row transform bank, and injected per-tenant live streams."""
+    from repro.core.predictor import PredictorSpec
+    from repro.core.quantiles import StreamingQuantileEstimator
+    from repro.core.routing import Condition, Intent, RoutingTable, ScoringRule
+    from repro.core.transforms import QuantileMap
+    from repro.serving import MuseServer, ServerConfig
+    from repro.serving.types import ScoringRequest
+
+    dim = 8
+    weights = [rng.normal(0, 1, dim).astype(np.float32) for _ in range(2)]
+
+    def _model(w):
+        return lambda x: jnp.asarray(
+            1.0 / (1.0 + np.exp(-(np.asarray(x, np.float32) @ w))))
+
+    rules = tuple(ScoringRule(Condition(tenants=(f"t{i}",)), f"p{i}")
+                  for i in range(n_tenants))
+    server = MuseServer(RoutingTable(rules, version="v1"),
+                        ServerConfig(track_quantiles=False))
+    factories = {"m1": lambda: _model(weights[0]),
+                 "m2": lambda: _model(weights[1])}
+    for i in range(n_tenants):
+        server.deploy(PredictorSpec(f"p{i}", ("m1", "m2"), (0.2, 0.3),
+                                    (1.0, 1.0), QuantileMap.identity(256)),
+                      factories)
+    # one mixed batch spanning every tenant warms the T-row bank
+    server.score_batch([
+        ScoringRequest(intent=Intent(tenant=f"t{i}"),
+                       features=rng.normal(0, 1, dim).astype(np.float32))
+        for i in range(n_tenants)
+    ])
+    # per-tenant live streams: shifted Beta draws (distinct distributions)
+    for i in range(n_tenants):
+        est = StreamingQuantileEstimator(capacity=131072, seed=i)
+        est.update(rng.beta(0.6 + 0.02 * (i % 8), 6.0 + 0.5 * (i % 5),
+                            n_samples))
+        server._estimators[(f"t{i}", f"p{i}")] = est
+    return server
+
+
+def run_refresh(quick: bool = False) -> dict:
+    """refresh_fleet() wall time vs tenant count (refit + validate + publish)."""
+    from repro.core.transforms import fraud_reference_quantiles
+    from repro.serving import CalibrationController, RefreshPolicy
+
+    tenant_counts = (4, 16, 64) if quick else (4, 16, 64, 128)
+    # Eq.-5 gate: a=1%, delta=50% (quick) needs ~1.5k samples, delta=20%
+    # needs ~9.5k — streams are injected just past the gate.
+    rel_error = 0.5 if quick else 0.2
+    n_samples = 2_000 if quick else 10_000
+    ref = np.asarray(fraud_reference_quantiles(256))
+    rows = []
+    for t in tenant_counts:
+        rng = np.random.default_rng(t)
+        server = _fleet_server(t, n_samples, rng)
+        ctrl = CalibrationController(
+            server, ref, RefreshPolicy(alert_rate=0.01, rel_error=rel_error))
+        t0 = time.perf_counter()
+        res = ctrl.refresh_fleet()
+        wall_ms = (time.perf_counter() - t0) * 1000.0
+        assert len(res.refreshed) == t, (
+            f"expected {t} refreshed streams, got {len(res.refreshed)} "
+            f"(rejected: {[r.reasons for r in res.rejected]})")
+        assert server.bank_generation == res.generation > 0
+        rows.append({
+            "tenants": t,
+            "samples_per_stream": n_samples,
+            "wall_ms": wall_ms,
+            "refit_ms": res.refit_seconds * 1000.0,
+            "validate_ms": res.validate_seconds * 1000.0,
+            "publish_ms": res.publish_seconds * 1000.0,
+            "us_per_tenant": wall_ms * 1000.0 / t,
+            "generation": res.generation,
+        })
+    largest = rows[-1]
+    return {
+        "rows": rows,
+        "max_tenants": largest["tenants"],
+        "wall_ms_at_max": largest["wall_ms"],
+        "us_per_tenant_at_max": largest["us_per_tenant"],
+    }
 
 
 def run(quick: bool = False) -> dict:
@@ -68,6 +161,7 @@ def run(quick: bool = False) -> dict:
 
 def main() -> None:
     res = run()
+    res["refresh"] = run_refresh()
     print(f"{'bin':<12} {'raw %':>10} {'v0 (default) %':>15} {'v1 (custom) %':>15}")
     for i, b in enumerate(res["bins"]):
         def fmt(v):
@@ -80,6 +174,13 @@ def main() -> None:
           "(paper: up to 1691%)")
     print(f"v1 max |rel err| in bins [0.5,0.8): {100*res['v1_max_abs_rel_err_mid_bins']:.1f}% "
           "(paper: 7.1-11%)")
+    print("\nfleet-wide atomic calibration refresh (refresh_fleet):")
+    print(f"{'tenants':>8} {'wall ms':>9} {'refit ms':>9} {'validate ms':>12} "
+          f"{'publish ms':>11} {'us/tenant':>10}")
+    for row in res["refresh"]["rows"]:
+        print(f"{row['tenants']:>8} {row['wall_ms']:>9.2f} "
+              f"{row['refit_ms']:>9.2f} {row['validate_ms']:>12.2f} "
+              f"{row['publish_ms']:>11.2f} {row['us_per_tenant']:>10.1f}")
 
 
 if __name__ == "__main__":

@@ -67,6 +67,19 @@ def run(quick: bool = False) -> dict:
     r_p15 = recall_at_fpr(p15_scores, y_post, 0.01)
     r_p2 = recall_at_fpr(p2_scores, y_post, 0.01)
 
+    # The control-plane validation view (serving/calibration.py step 4):
+    # PSI drift + realized alert rate at the fixed client threshold tau.
+    # p1.5 (stale T^Q across the model update) drifts and shifts the alert
+    # rate; p2 (refreshed T^Q) must sit back inside the drift/rate bounds —
+    # the quantitative form of "the update is invisible to client thresholds".
+    from repro.serving.drift import realized_alert_rate, transformed_stream_psi
+    target_a = 0.01
+    alert_p1 = realized_alert_rate(p1_scores, world.ref_quantiles, target_a)
+    alert_p15 = realized_alert_rate(p15_scores, world.ref_quantiles, target_a)
+    alert_p2 = realized_alert_rate(p2_scores, world.ref_quantiles, target_a)
+    psi_p15 = transformed_stream_psi(p15_scores, world.ref_quantiles)
+    psi_p2 = transformed_stream_psi(p2_scores, world.ref_quantiles)
+
     def _errs(res):
         return [None if np.isnan(v) else float(v) for v in res["rel_err"]]
 
@@ -77,6 +90,12 @@ def run(quick: bool = False) -> dict:
         "recall_gain_pct_points": 100.0 * (r_p2 - r_p1),
         "p15_max_abs_err": float(np.nanmax(np.abs(res_p15["rel_err"]))),
         "p2_max_abs_err": float(np.nanmax(np.abs(res_p2["rel_err"][:8]))),
+        "target_alert_rate": target_a,
+        "alert_rate_p1": alert_p1,
+        "alert_rate_p1.5": alert_p15,
+        "alert_rate_p2": alert_p2,
+        "psi_p1.5": psi_p15,
+        "psi_p2": psi_p2,
     }
 
 
@@ -93,6 +112,13 @@ def main() -> None:
           f"{abs(res['recall_p1.5'] - res['recall_p2']) < 1e-9}")
     print(f"p2 - p1 recall gain: {res['recall_gain_pct_points']:+.2f} pct points "
           "(paper: +1.1)")
+    a = res["target_alert_rate"]
+    print(f"\nalert rate at fixed tau (target {100*a:.1f}%): "
+          f"p1={100*res['alert_rate_p1']:.2f}%  "
+          f"p1.5={100*res['alert_rate_p1.5']:.2f}%  "
+          f"p2={100*res['alert_rate_p2']:.2f}%")
+    print(f"PSI vs reference: p1.5={res['psi_p1.5']:.3f}  "
+          f"p2={res['psi_p2']:.3f}  (refresh restores < 0.25 bound)")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,13 @@ def main() -> None:
          f"v0_max_high_bin_err={r['v0_max_abs_rel_err_high_bins']:.2f};"
          f"v1_max_mid_bin_err={r['v1_max_abs_rel_err_mid_bins']:.3f}")
 
+    # ---- fleet-wide atomic calibration refresh (separate timing row) -------
+    rr = bench_fig4_quantile_update.run_refresh(quick=quick)
+    _csv("fig4_fleet_refresh", rr["wall_ms_at_max"] * 1e3,
+         f"tenants={rr['max_tenants']};"
+         f"us_per_tenant={rr['us_per_tenant_at_max']:.1f};"
+         f"atomic_generations={rr['rows'][-1]['generation']}")
+
     # ---- Fig. 6: live model update -----------------------------------------
     t0 = time.perf_counter()
     from benchmarks import bench_fig6_model_update
@@ -54,7 +61,9 @@ def main() -> None:
     _csv("fig6_model_update", dt,
          f"recall_p1={r['recall_p1']:.4f};recall_p2={r['recall_p2']:.4f};"
          f"monotone_recall_invariant={abs(r['recall_p1.5'] - r['recall_p2']) < 1e-9};"
-         f"p15_max_err={r['p15_max_abs_err']:.2f};p2_max_err={r['p2_max_abs_err']:.2f}")
+         f"p15_max_err={r['p15_max_abs_err']:.2f};p2_max_err={r['p2_max_abs_err']:.2f};"
+         f"alert_rate_p15={r['alert_rate_p1.5']:.4f};"
+         f"alert_rate_p2={r['alert_rate_p2']:.4f};psi_p2={r['psi_p2']:.3f}")
 
     # ---- Fig. 5: rollout stability -----------------------------------------
     t0 = time.perf_counter()

@@ -10,6 +10,7 @@ Two estimation paths:
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
@@ -46,9 +47,16 @@ class StreamingQuantileEstimator:
 
     capacity: int = 131072
     seed: int = 0
+    # ring of the newest samples, independent of reservoir acceptance: the
+    # calibration controller validates refit candidates against this window,
+    # so a distribution shift AFTER the reservoir filled (which uniform
+    # sampling dilutes almost invisibly) still fails support coverage
+    recent_capacity: int = 4096
 
     def __post_init__(self) -> None:
         self._buf = np.empty((self.capacity,), dtype=np.float64)
+        self._recent = np.empty((self.recent_capacity,), dtype=np.float64)
+        self._recent_pos = 0   # explicit ring pointer (bulk writes reset it)
         self._seen = 0
         self._rng = np.random.default_rng(self.seed)
 
@@ -65,6 +73,14 @@ class StreamingQuantileEstimator:
         k = len(scores)
         if k == 0:
             return
+        rc = self.recent_capacity
+        if k >= rc:
+            self._recent[:] = scores[-rc:]
+            self._recent_pos = 0
+        else:
+            pos = (self._recent_pos + np.arange(k)) % rc
+            self._recent[pos] = scores
+            self._recent_pos = int((self._recent_pos + k) % rc)
         fill = min(self.capacity - min(self._seen, self.capacity), k)
         if fill > 0:
             start = self._seen
@@ -87,9 +103,60 @@ class StreamingQuantileEstimator:
         q = np.quantile(data, np.asarray(levels))
         return np.maximum.accumulate(q)
 
+    def values(self) -> np.ndarray:
+        """Read-only view of the retained (reservoir) samples."""
+        view = self._buf[: min(self._seen, self.capacity)]
+        view.flags.writeable = False
+        return view
+
+    def recent(self) -> np.ndarray:
+        """Read-only view of the newest ≤``recent_capacity`` samples
+        (unordered).  Empty until the first update."""
+        view = self._recent[: min(self._seen, self.recent_capacity)]
+        view.flags.writeable = False
+        return view
+
     def ready(self, alert_rate: float, rel_error: float, z: float = 1.96) -> bool:
         """Has this stream accumulated enough events for a trustworthy T^Q?"""
         return self._seen >= required_sample_size(alert_rate, rel_error, z)
+
+
+def batch_sample_quantiles(
+    samples: Sequence[np.ndarray],
+    levels: np.ndarray,
+) -> np.ndarray:
+    """Quantiles of MANY sample sets in one vectorized pass -> (R, L).
+
+    The fleet-wide calibration refresh refits every ready (tenant, predictor)
+    stream at once.  Rows are padded with +inf into one (R, C_max) matrix,
+    sorted with a single ``np.sort`` call (C-level, the padding tails sort
+    last), and every row's quantile table comes from two vectorized
+    ``take_along_axis`` gathers with linear interpolation against the row's
+    OWN length — identical semantics to ``np.quantile(row, levels)``
+    (method='linear') per row, without numpy's per-row ``nanquantile``
+    Python loop.  Monotonicity is enforced per row (fp jitter guard, same
+    as the scalar path).
+    """
+    levels = np.asarray(levels, np.float64)
+    if not samples:
+        return np.empty((0, len(levels)), np.float64)
+    rows = [np.asarray(r, np.float64).ravel() for r in samples]
+    lens = np.array([len(r) for r in rows], np.int64)
+    if (lens == 0).any():
+        raise ValueError("cannot refit a stream with no samples")
+    mat = np.full((len(rows), int(lens.max())), np.inf, np.float64)
+    for i, r in enumerate(rows):
+        mat[i, : len(r)] = r
+    mat.sort(axis=1)
+    # np.quantile 'linear' method: position = level * (n - 1), per row
+    pos = levels[None, :] * (lens[:, None] - 1).astype(np.float64)  # (R, L)
+    lo = np.floor(pos).astype(np.int64)
+    hi = np.ceil(pos).astype(np.int64)
+    frac = pos - lo
+    q_lo = np.take_along_axis(mat, lo, axis=1)
+    q_hi = np.take_along_axis(mat, hi, axis=1)
+    q = q_lo + (q_hi - q_lo) * frac                    # (R, L)
+    return np.maximum.accumulate(q, axis=1)
 
 
 def batch_quantiles(scores: np.ndarray, n_levels: int) -> tuple[np.ndarray, np.ndarray]:

@@ -13,7 +13,7 @@ update" = replacing these pytrees under a stable routing intent), and sharded.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -250,12 +250,21 @@ class TransformBank:
     batch runs Eq. 2 in ONE dispatch (``kernels/score_pipeline.py::
     score_pipeline_banked``) instead of a Python loop of per-predictor calls.
     This is MUSE's multi-tenant reuse made literal on the serving hot path.
+
+    Banks are immutable and carry a ``generation`` (static metadata, not a
+    traced leaf): the calibration control plane publishes a refreshed bank as
+    a NEW object with a bumped generation and swaps the reference atomically.
+    In-flight dispatches that already snapshotted the old bank finish on the
+    old parameters; the next window sees the new generation — never a torn
+    mix of rows from two calibration versions.
     """
 
     betas: Array          # (T, K)
     weights: Array        # (T, K)
     src_quantiles: Array  # (T, N)
     ref_quantiles: Array  # (T, N)
+    generation: int = dataclasses.field(
+        default=0, metadata=dict(static=True))
 
     @property
     def num_rows(self) -> int:
@@ -285,9 +294,55 @@ class TransformBank:
         w = weights / jnp.sum(weights, axis=-1, keepdims=True)
         return jnp.sum(corrected * w, axis=-1)
 
+    def with_rows(
+        self,
+        rows: Mapping[int, tuple[Array, Array]] | Mapping[int, "QuantileMap"],
+        *,
+        generation: int | None = None,
+    ) -> "TransformBank":
+        """Functional update: replace the T^Q tables of selected rows.
+
+        ``rows`` maps row index -> ``QuantileMap`` (or a raw ``(src, ref)``
+        pair).  Returns a NEW bank — the receiver is never mutated, so any
+        dispatch holding it keeps scoring with the old parameters.  All
+        replacement tables are scattered in one ``.at[idx].set`` per array.
+        Tables narrower than the bank's N are edge-padded (flat segments are
+        degenerate-guarded, same as ``from_params``); wider tables are a
+        shape error.  ``generation`` defaults to the current one + 1.
+        """
+        if not rows:
+            return self if generation is None else dataclasses.replace(
+                self, generation=generation)
+        n = self.num_quantiles
+        idx, srcs, refs = [], [], []
+        for row, value in sorted(rows.items()):
+            if not 0 <= row < self.num_rows:
+                raise IndexError(f"row {row} outside bank of {self.num_rows}")
+            src, ref = (value.src_quantiles, value.ref_quantiles) \
+                if isinstance(value, QuantileMap) else value
+            src = jnp.asarray(src, jnp.float32)
+            ref = jnp.asarray(ref, jnp.float32)
+            pad = n - src.shape[-1]
+            if pad < 0:
+                raise ValueError(
+                    f"row {row}: {src.shape[-1]} knots > bank's {n}")
+            if pad:
+                src = jnp.pad(src, (0, pad), mode="edge")
+                ref = jnp.pad(ref, (0, pad), mode="edge")
+            idx.append(row)
+            srcs.append(src)
+            refs.append(ref)
+        idx = jnp.asarray(idx, jnp.int32)
+        return dataclasses.replace(
+            self,
+            src_quantiles=self.src_quantiles.at[idx].set(jnp.stack(srcs)),
+            ref_quantiles=self.ref_quantiles.at[idx].set(jnp.stack(refs)),
+            generation=self.generation + 1 if generation is None else generation,
+        )
+
     @staticmethod
-    def from_params(params: Sequence[tuple[Array, Array, Array, Array]]
-                    ) -> "TransformBank":
+    def from_params(params: Sequence[tuple[Array, Array, Array, Array]],
+                    *, generation: int = 0) -> "TransformBank":
         """Stack (betas, weights, src_q, ref_q) rows, padding ragged axes.
 
         Expert axes are padded with ``beta=1, weight=0`` columns (identity
@@ -318,6 +373,7 @@ class TransformBank:
             weights=jnp.stack([_pad_k(w, 0.0) for _, w, _, _ in rows]),
             src_quantiles=jnp.stack([_pad_n(qs) for _, _, qs, _ in rows]),
             ref_quantiles=jnp.stack([_pad_n(qr) for _, _, _, qr in rows]),
+            generation=generation,
         )
 
 

@@ -1,5 +1,11 @@
-"""Serving runtime: the MUSE data plane + rollout control plane."""
+"""Serving runtime: the MUSE data plane + rollout/calibration control plane."""
 from repro.serving.batching import MicroBatcher, ServerBatcher
+from repro.serving.calibration import (
+    CalibrationController,
+    CandidateReport,
+    RefreshPolicy,
+    RefreshResult,
+)
 from repro.serving.rollout import Replica, ReplicaSet, RollingUpdate
 from repro.serving.server import FeatureStore, MuseServer, ServerConfig
 from repro.serving.shadow import ShadowSink
@@ -7,6 +13,7 @@ from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
 
 __all__ = [
     "MicroBatcher", "ServerBatcher", "Replica", "ReplicaSet", "RollingUpdate",
-    "FeatureStore", "MuseServer", "ServerConfig", "ShadowSink",
-    "ScoringRequest", "ScoringResponse", "ShadowRecord",
+    "CalibrationController", "CandidateReport", "RefreshPolicy",
+    "RefreshResult", "FeatureStore", "MuseServer", "ServerConfig",
+    "ShadowSink", "ScoringRequest", "ScoringResponse", "ShadowRecord",
 ]

@@ -1,0 +1,297 @@
+"""Fleet-wide atomic calibration refresh — the T^Q control plane.
+
+The paper's core promise (Sec. 3.1) is that retraining-induced score-
+distribution shift never invalidates client thresholds: the Quantile Mapping
+T^Q is refit from the live stream and swapped in minutes, fleet-wide, so a
+model update is invisible to every tenant's alerting rules.  This module is
+that control plane.  :class:`CalibrationController.refresh_fleet` runs one
+pass of the update lifecycle; each step maps onto the paper:
+
+  1. **Scan** — enumerate every live (tenant, predictor) score stream the
+     server has accumulated (the unlabeled post-aggregation T^Q *input*
+     distribution, Sec. 2.3.3 — fitting needs no labels).
+  2. **Gate (Eq. 5)** — a stream is refit only once it holds at least
+     ``n = z^2 (1-a) / (delta^2 a)`` samples, the Appendix-A bound ensuring
+     the realized alert rate at the fitted threshold deviates from the
+     target ``a`` by at most ``delta`` (relative) with confidence ``z``.
+  3. **Refit** — ALL ready streams are refit in ONE vectorized pass
+     (:func:`repro.core.quantiles.batch_sample_quantiles`): reservoirs are
+     padded into a single matrix and every tenant's source quantile table
+     comes out of one ``np.nanquantile`` call (Eq. 4's q^S_i, fleet-wide).
+  4. **Validate** — each candidate T^Q is checked against the live stream
+     before it may ship: monotone non-decreasing knots (rank preservation,
+     the paper's ROC invariant), non-degenerate support coverage, and a
+     drift bound — PSI of the candidate-mapped stream against the reference
+     R plus a realized-alert-rate band (``serving/drift.py``).  A failed
+     candidate is withheld; the old map keeps serving.
+  5. **Publish (atomic)** — every validated map lands in ONE
+     ``MuseServer.publish_quantile_maps`` call: all affected model-group
+     ``TransformBank``s are rebuilt as new immutable objects stamped with a
+     bumped generation, then the server's references are swapped wholesale.
+     In-flight dispatches finish on the old bank; the next window sees the
+     new one — no torn reads, no partially-refreshed fleet.
+
+Wired into ``serving/rollout.py``, a model promotion triggers the refresh
+automatically — the paper's "model lead time from weeks to minutes",
+testable end-to-end (``tests/test_calibration_refresh.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantiles import batch_sample_quantiles
+from repro.core.transforms import QuantileMap
+from repro.serving.drift import realized_alert_rate, transformed_stream_psi
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshPolicy:
+    """Gating + validation knobs for one fleet refresh pass."""
+
+    alert_rate: float = 0.01        # Eq. 5 target alert rate ``a``
+    rel_error: float = 0.2          # Eq. 5 relative error ``delta``
+    z: float = 1.96                 # Eq. 5 confidence (95%)
+    n_levels: int = 256             # knots in the refitted T^Q tables
+    psi_bound: float = 0.25         # candidate-vs-reference drift bound
+    alert_rate_tolerance: float = 0.5   # |realized - a| / a bound at tau
+    min_distinct_knots: int = 8     # support coverage: degenerate-fit guard
+    drift_bins: int = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateReport:
+    """Per-(tenant, predictor) outcome of one refresh pass."""
+
+    tenant: str
+    predictor: str
+    samples: int                     # total events the stream has observed
+    status: str                      # "refreshed" | "not_ready" | "rejected"
+    reasons: tuple[str, ...] = ()
+    psi: float = math.nan
+    realized_alert_rate: float = math.nan
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshResult:
+    """Outcome of one ``refresh_fleet`` pass."""
+
+    generation: int                  # server bank generation after the pass
+    reports: tuple[CandidateReport, ...]
+    refit_seconds: float
+    validate_seconds: float
+    publish_seconds: float
+
+    def _with(self, status: str) -> list[CandidateReport]:
+        return [r for r in self.reports if r.status == status]
+
+    @property
+    def refreshed(self) -> list[CandidateReport]:
+        return self._with("refreshed")
+
+    @property
+    def rejected(self) -> list[CandidateReport]:
+        return self._with("rejected")
+
+    @property
+    def not_ready(self) -> list[CandidateReport]:
+        return self._with("not_ready")
+
+
+class CalibrationController:
+    """The calibration control plane for one :class:`MuseServer`.
+
+    Owns the scan -> gate -> refit -> validate -> publish loop described in
+    the module docstring.  The controller never mutates served state except
+    through the server's atomic ``publish_quantile_maps`` — the data plane
+    cannot observe a half-applied refresh.
+    """
+
+    def __init__(self, server: "object", ref_quantiles: np.ndarray,
+                 policy: RefreshPolicy | None = None) -> None:
+        self.server = server
+        self.ref_quantiles = np.asarray(ref_quantiles, np.float64)
+        self.policy = policy or RefreshPolicy()
+        self.history: list[RefreshResult] = []
+
+    # ------------------------------------------------------------------ scan
+    def scan(self) -> dict[tuple[str, str], "object"]:
+        """Step 1: every live (tenant, predictor) estimator stream."""
+        return self.server.estimator_streams()
+
+    def ready(self) -> dict[tuple[str, str], "object"]:
+        """Step 2: streams past the Eq. 5 sample-size gate."""
+        p = self.policy
+        return {k: est for k, est in self.scan().items()
+                if est.ready(p.alert_rate, p.rel_error, p.z)}
+
+    @staticmethod
+    def _support_coverage(src: np.ndarray, stream: np.ndarray) -> float:
+        lo, hi = src[0], src[-1]
+        span = max(hi - lo, 1e-12)
+        return float(np.mean((stream >= lo - 0.01 * span)
+                             & (stream <= hi + 0.01 * span)))
+
+    # -------------------------------------------------------------- validate
+    def _validate(self, src: np.ndarray, ref: np.ndarray, stream: np.ndarray,
+                  recent: np.ndarray | None = None,
+                  ) -> tuple[tuple[str, ...], float, float]:
+        """Step 4 checks for one candidate against one live stream.
+
+        ``recent`` is the stream's newest-samples window: the candidate was
+        fitted on the (all-time, uniformly sampled) reservoir, so checking
+        support coverage against the reservoir alone is vacuous — a shift
+        that happened AFTER the reservoir filled is diluted to near
+        invisibility there, but dominates the recent window and must fail
+        coverage.  Returns (failure reasons, psi, realized alert rate);
+        empty reasons means the candidate may ship for this stream.
+        """
+        p = self.policy
+        reasons: list[str] = []
+        if not np.isfinite(src).all():
+            reasons.append("non_finite_knots")
+        if np.any(np.diff(src) < -1e-9):
+            reasons.append("non_monotone")
+        if len(np.unique(src)) < p.min_distinct_knots:
+            reasons.append("degenerate_support")
+        if self._support_coverage(src, stream) < 0.99:
+            reasons.append("support_coverage")
+        if recent is not None and len(recent) \
+                and self._support_coverage(src, recent) < 0.98:
+            reasons.append("support_coverage_recent")
+        if reasons:
+            return tuple(reasons), math.nan, math.nan
+        # drift bound: map the live stream through the candidate and compare
+        # against R (np.interp == Eq. 4 on monotone tables, clipped to R)
+        mapped = np.interp(stream, src, ref)
+        drift = transformed_stream_psi(mapped, self.ref_quantiles,
+                                       n_bins=p.drift_bins)
+        rate = realized_alert_rate(mapped, self.ref_quantiles, p.alert_rate)
+        if drift > p.psi_bound:
+            reasons.append("psi_bound")
+        if abs(rate - p.alert_rate) / p.alert_rate > p.alert_rate_tolerance:
+            reasons.append("alert_rate_shift")
+        return tuple(reasons), drift, rate
+
+    # --------------------------------------------------------------- refresh
+    def refresh_fleet(self, only: "set[tuple[str, str]] | None" = None
+                      ) -> RefreshResult:
+        """One full pass: scan, gate, vectorized refit, validate, publish.
+
+        ``only`` restricts the pass to the given (tenant, predictor) keys —
+        the drift-triggered path (``drift.py::CalibrationRefreshController``)
+        refreshes just its alarmed streams through the same gate/validate/
+        atomic-publish machinery.  The restriction is widened to PREDICTOR
+        granularity: a published map recalibrates every tenant on that
+        predictor, so all of its live streams must join the pooled refit and
+        the validation (otherwise a single alarmed tenant could silently
+        shift its peers' alert rates — the veto invariant would be
+        bypassed).  Returns a :class:`RefreshResult`; the publish (if any
+        stream was refreshed) is a single atomic generation bump on the
+        server.
+        """
+        p = self.policy
+        streams = self.scan()
+        if only is not None:
+            preds = {pred for _, pred in only}
+            streams = {k: v for k, v in streams.items() if k[1] in preds}
+        ready = {k: est for k, est in streams.items()
+                 if est.ready(p.alert_rate, p.rel_error, p.z)}
+        not_ready_reports: dict[tuple[str, str], CandidateReport] = {
+            (t, pred): CandidateReport(t, pred, est.count, "not_ready",
+                                       reasons=("eq5_gate",))
+            for (t, pred), est in streams.items() if (t, pred) not in ready
+        }
+
+        # Step 3: one vectorized refit across the whole ready fleet.  Ready
+        # streams are grouped by predictor (the published unit); a predictor
+        # serving several ready tenant streams is refit on the pooled
+        # samples, and the pooled candidate must validate against EVERY
+        # tenant's stream before it may ship.
+        t0 = time.perf_counter()
+        by_pred: dict[str, list[tuple[str, "object"]]] = {}
+        for (tenant, pred), est in ready.items():
+            by_pred.setdefault(pred, []).append((tenant, est))
+        pred_names = sorted(by_pred)
+        levels = np.linspace(0.0, 1.0, p.n_levels)
+        pooled = [np.concatenate([est.values() for _, est in by_pred[n]])
+                  for n in pred_names]
+        src_tables = batch_sample_quantiles(pooled, levels)   # (R, n_levels)
+        refit_s = time.perf_counter() - t0
+
+        # Step 4: per-stream validation of each predictor's candidate.
+        t0 = time.perf_counter()
+        ref = np.interp(levels, np.linspace(0.0, 1.0, len(self.ref_quantiles)),
+                        self.ref_quantiles)
+        updates: dict[str, QuantileMap] = {}
+        reports: list[CandidateReport] = []
+        for row, pred in enumerate(pred_names):
+            src = src_tables[row]
+            ship = True
+            stream_reports: list[CandidateReport] = []
+            for tenant, est in by_pred[pred]:
+                samples = est.values()
+                recent = est.recent() if hasattr(est, "recent") else None
+                reasons, drift, rate = self._validate(src, ref, samples,
+                                                      recent)
+                ok = not reasons
+                ship = ship and ok
+                stream_reports.append(CandidateReport(
+                    tenant, pred, est.count,
+                    "refreshed" if ok else "rejected", reasons, drift, rate))
+            # NOT-ready peer streams of this predictor are recalibrated by
+            # the publish too, yet never joined the pool — give them a
+            # support-coverage vote (robust at small n, unlike PSI/rate):
+            # traffic outside the candidate's support must veto the publish
+            for (t2, p2), est in streams.items():
+                if p2 != pred or (t2, p2) in ready:
+                    continue
+                peer_reasons: list[str] = []
+                samples2 = est.values()
+                if len(samples2) and \
+                        self._support_coverage(src, samples2) < 0.99:
+                    peer_reasons.append("support_coverage")
+                recent2 = est.recent() if hasattr(est, "recent") else None
+                if recent2 is not None and len(recent2) and \
+                        self._support_coverage(src, recent2) < 0.98:
+                    peer_reasons.append("support_coverage_recent")
+                if peer_reasons:
+                    ship = False
+                    not_ready_reports[(t2, p2)] = dataclasses.replace(
+                        not_ready_reports[(t2, p2)],
+                        reasons=("eq5_gate", *peer_reasons))
+            if ship:
+                updates[pred] = QuantileMap(
+                    src_quantiles=jnp.asarray(src, jnp.float32),
+                    ref_quantiles=jnp.asarray(ref, jnp.float32))
+                reports.extend(stream_reports)
+            else:
+                # withhold the whole predictor: publishing a map one of its
+                # tenants rejects would shift that tenant's alert rate.
+                # Streams that passed individually are marked as vetoed so
+                # the report distinguishes "this stream failed" from "a
+                # peer tenant on the shared predictor failed".
+                reports.extend(
+                    r if r.status == "rejected" else dataclasses.replace(
+                        r, status="rejected", reasons=("vetoed_by_peer",))
+                    for r in stream_reports)
+        reports = list(not_ready_reports.values()) + reports
+        validate_s = time.perf_counter() - t0
+
+        # Step 5: one atomic publish for the entire fleet.
+        t0 = time.perf_counter()
+        generation = self.server.publish_quantile_maps(updates) \
+            if updates else self.server.bank_generation
+        publish_s = time.perf_counter() - t0
+
+        result = RefreshResult(
+            generation=generation, reports=tuple(reports),
+            refit_seconds=refit_s, validate_seconds=validate_s,
+            publish_seconds=publish_s)
+        self.history.append(result)
+        return result

@@ -43,6 +43,45 @@ def reference_bin_masses(ref_quantiles: np.ndarray, edges: np.ndarray,
     return np.diff(cdf)
 
 
+def transformed_stream_psi(transformed_scores: np.ndarray,
+                           ref_quantiles: np.ndarray,
+                           n_bins: int = 10) -> float:
+    """PSI of an (already T^Q-mapped) score sample against the reference R.
+
+    The calibration controller's candidate-validation bound: a refreshed
+    T^Q applied to the very stream it was fitted on must land close to R —
+    a large PSI here means the fit is untrustworthy (degenerate support,
+    poisoned stream), and the candidate must not be published.
+    """
+    s = np.asarray(transformed_scores, np.float64).ravel()
+    if len(s) == 0:
+        return float("inf")
+    edges = np.linspace(0.0, 1.0, n_bins + 1)
+    expected = reference_bin_masses(ref_quantiles, edges)
+    counts, _ = np.histogram(np.clip(s, 0.0, 1.0), bins=edges)
+    return psi(counts / len(s), expected)
+
+
+def realized_alert_rate(transformed_scores: np.ndarray,
+                        ref_quantiles: np.ndarray,
+                        target_alert_rate: float,
+                        levels: np.ndarray | None = None) -> float:
+    """Fraction of scores above the reference alert threshold.
+
+    The client threshold tau is the (1 - a) quantile of R (a = target alert
+    rate); the paper's headline invariant is that a calibration refresh keeps
+    the realized rate at tau within the Eq.-5 error band of a.
+    """
+    tq = np.asarray(ref_quantiles, np.float64)
+    if levels is None:
+        levels = np.linspace(0.0, 1.0, len(tq))
+    tau = float(np.interp(1.0 - target_alert_rate, levels, tq))
+    s = np.asarray(transformed_scores, np.float64).ravel()
+    if len(s) == 0:
+        return float("nan")
+    return float(np.mean(s >= tau))
+
+
 @dataclasses.dataclass
 class DriftMonitor:
     """Rolling-window drift detector for one (tenant, predictor) stream."""
@@ -92,11 +131,19 @@ class CalibrationRefreshController:
     ref_quantiles: np.ndarray
     psi_alarm: float = 0.25
     window: int = 20_000
+    # ticks an alarmed-but-rejected stream sits out before the next refresh
+    # attempt — a persistently poisoned stream must not re-run the pooled
+    # refit + validation of its whole predictor on every tick
+    reject_cooldown: int = 5
     refreshes: list[tuple[str, str, float]] = dataclasses.field(
+        default_factory=list)
+    # rejected/vetoed attempts, for operators: (tenant, predictor, reasons)
+    rejections: list[tuple[str, str, tuple[str, ...]]] = dataclasses.field(
         default_factory=list)
 
     def __post_init__(self) -> None:
         self._monitors: dict[tuple[str, str], DriftMonitor] = {}
+        self._cooldown: dict[tuple[str, str], int] = {}
 
     def observe(self, tenant: str, predictor: str,
                 served_scores: np.ndarray) -> None:
@@ -125,21 +172,57 @@ class CalibrationRefreshController:
         self.server.score_batch = wrapped
 
     def tick(self) -> list[tuple[str, str, float]]:
-        """Run one control-loop pass; returns refreshes performed."""
+        """Run one control-loop pass; returns refreshes performed.
+
+        Drift-alarmed streams past the Eq.-5 gate are refreshed through
+        ``CalibrationController.refresh_fleet(only=...)`` — the SAME
+        gate/validate/atomic-publish machinery as the fleet-wide pass, so a
+        poisoned or degenerate stream that trips the drift alarm can never
+        ship an unvalidated T^Q, and all due refreshes land as ONE bank
+        generation instead of a swap per stream.
+        """
+        for key in list(self._cooldown):
+            self._cooldown[key] -= 1
+            if self._cooldown[key] <= 0:
+                del self._cooldown[key]
+        due = {(t, p): mon.current_psi()
+               for (t, p), mon in self._monitors.items()
+               if mon.drifted() and (t, p) not in self._cooldown
+               and self.server.calibration_ready(t, p)}
+        if not due:
+            return []
+        # local import: calibration.py imports this module's validators
+        from repro.serving.calibration import (
+            CalibrationController,
+            RefreshPolicy,
+        )
+        cfg = self.server.config
+        ctrl = CalibrationController(
+            self.server, self.ref_quantiles,
+            RefreshPolicy(alert_rate=cfg.refresh_alert_rate,
+                          rel_error=cfg.refresh_rel_error,
+                          psi_bound=self.psi_alarm))
+        result = ctrl.refresh_fleet(only=set(due))
+        refreshed_keys = {(r.tenant, r.predictor) for r in result.refreshed}
+        for rep in result.rejected:
+            self.rejections.append((rep.tenant, rep.predictor, rep.reasons))
+        for key in due:
+            if key not in refreshed_keys:   # rejected or vetoed: back off
+                self._cooldown[key] = self.reject_cooldown
         done = []
-        for (tenant, pred), mon in self._monitors.items():
-            if not mon.drifted():
-                continue
-            if not self.server.calibration_ready(tenant, pred):
-                continue  # Eq.-5 gate closed: not enough raw samples yet
-            drift = mon.current_psi()
-            qm = self.server.fit_custom_quantile_map(
-                tenant, pred, self.ref_quantiles)
-            self.server.swap_transformation(pred, qm)
+        for rep in result.refreshed:
+            key = (rep.tenant, rep.predictor)
+            # refresh_fleet widens to predictor granularity, so peers of an
+            # alarmed tenant may be refreshed without an alarm of their own:
+            # report their current (sub-alarm) PSI
+            psi_val = due.get(key)
+            if psi_val is None:
+                mon = self._monitors.get(key)
+                psi_val = mon.current_psi() if mon is not None else 0.0
             # reset the window so the new transformation is judged fresh
-            self._monitors[(tenant, pred)] = DriftMonitor(
+            self._monitors[key] = DriftMonitor(
                 self.ref_quantiles, window=self.window,
                 psi_alarm=self.psi_alarm)
-            done.append((tenant, pred, drift))
+            done.append((rep.tenant, rep.predictor, psi_val))
         self.refreshes.extend(done)
         return done

@@ -82,12 +82,20 @@ class RollingUpdate:
         *,
         schema_dim: int,
         warmup_batch_sizes: tuple[int, ...] = (1, 8, 64),
+        calibration_factory: Callable[["object"], "object"] | None = None,
     ) -> None:
+        """``calibration_factory``: optional ``server -> CalibrationController``
+        hook.  When set, every promoted replica triggers a fleet calibration
+        refresh right after its warm-up — the paper's Sec.-3.1 lifecycle
+        where a model promotion automatically refits T^Q from the live
+        streams the replica carries (no out-of-band operator step)."""
         self.rs = replica_set
         self.make_server = make_server
         self.new_version = new_version
         self.schema_dim = schema_dim
         self.warmup_batch_sizes = warmup_batch_sizes
+        self.calibration_factory = calibration_factory
+        self.refreshes: list["object"] = []   # RefreshResult per promotion
         self._next_id = max((r.replica_id for r in replica_set.replicas),
                             default=-1) + 1
         self.events: list[RolloutEvent] = []
@@ -119,6 +127,17 @@ class RollingUpdate:
             new.ready = True
             self._log("ready", new.replica_id)
             yield "warmed"
+
+            # model promotion -> automatic fleet calibration refresh: refit
+            # every ready (tenant, predictor) stream and publish one new
+            # transform-bank generation atomically before the old replica
+            # drains (clients never see the un-refreshed new model for
+            # longer than one warm-up window)
+            if self.calibration_factory is not None:
+                self.refreshes.append(
+                    self.calibration_factory(new.server).refresh_fleet())
+                self._log("calibrate", new.replica_id)
+                yield "calibrated"
 
             # drain the old replica (maxUnavailable=0: only after new is ready)
             victim.ready = False

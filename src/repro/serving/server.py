@@ -74,6 +74,19 @@ class ServerConfig:
     fused_kernel: bool = True
 
 
+@dataclasses.dataclass(frozen=True)
+class _BankEntry:
+    """A cached model-group bank pinned to the pipelines it was built from.
+
+    ``pipelines`` is the identity witness: a ``publish_quantile_maps`` /
+    redeploy replaces pipeline objects, so a stale entry fails the identity
+    check and is rebuilt.  The bank itself carries the generation it was
+    published under (see :class:`~repro.core.transforms.TransformBank`)."""
+
+    pipelines: tuple[Any, ...]
+    bank: TransformBank
+
+
 class MuseServer:
     def __init__(self, routing: RoutingTable,
                  config: ServerConfig | None = None) -> None:
@@ -86,11 +99,20 @@ class MuseServer:
         # per (tenant, predictor) streaming estimators for calibration refresh
         self._estimators: dict[tuple[str, str], StreamingQuantileEstimator] = {}
         # model-group transform banks, keyed by ordered predictor names.
-        # Values keep the source pipelines so identity checks detect swaps.
-        self._banks: dict[tuple[str, ...],
-                          tuple[tuple[Any, ...], TransformBank]] = {}
+        # The dict REFERENCE is swapped wholesale on a calibration publish
+        # (never mutated row-by-row across a publish): a dispatch snapshots
+        # it once, so an in-flight window finishes on the old generation and
+        # the next window sees the new one — no torn reads.
+        self._banks: dict[tuple[str, ...], _BankEntry] = {}
+        self._bank_generation = 0
         self.metrics: dict[str, float] = {
-            "requests": 0, "shadow_evals": 0, "kernel_dispatches": 0}
+            "requests": 0, "shadow_evals": 0, "kernel_dispatches": 0,
+            "model_group_calls": 0, "model_calls": 0, "bank_generation": 0}
+
+    @property
+    def bank_generation(self) -> int:
+        """Monotone counter of atomic calibration publishes."""
+        return self._bank_generation
 
     # ------------------------------------------------------------------ control
     def deploy(self, spec: PredictorSpec,
@@ -105,6 +127,11 @@ class MuseServer:
         pred.release(self.pool)
         # drop cached banks referencing the dead predictor's pipeline
         self._banks = {k: v for k, v in self._banks.items() if name not in k}
+        # and its estimator streams: a future predictor redeployed under the
+        # same name has a different score distribution — refitting T^Q from
+        # the dead model's stream would publish a miscalibrated map
+        self._estimators = {k: v for k, v in self._estimators.items()
+                            if k[1] != name}
 
     def publish_routing(self, table: RoutingTable) -> None:
         """Atomic routing swap — the transparent model switching primitive."""
@@ -116,10 +143,67 @@ class MuseServer:
 
     def swap_transformation(self, predictor_name: str, qm: QuantileMap) -> None:
         """T^Q_v0 -> T^Q_v1 without touching models (Sec. 3.1)."""
-        pred = self.predictors[predictor_name]
-        self.predictors[predictor_name] = pred.with_updated_pipeline(
-            pred.pipeline.with_quantile_map(qm)
-        )
+        self.publish_quantile_maps({predictor_name: qm})
+
+    def publish_quantile_maps(self, updates: Mapping[str, QuantileMap]) -> int:
+        """Atomically publish refreshed T^Q maps for MANY predictors at once.
+
+        The fleet-wide calibration refresh (Sec. 3.1, `serving/calibration.py`)
+        lands here: every updated predictor pipeline AND every affected
+        model-group bank is rebuilt first, then the ``predictors`` / ``_banks``
+        references are swapped in one step under a bumped generation.  A
+        dispatch that already snapshotted the old structures finishes on the
+        old parameters; the next window sees the complete new generation —
+        a batch can never mix rows from two calibration versions.
+
+        Returns the new bank generation.
+        """
+        missing = [n for n in updates if n not in self.predictors]
+        if missing:
+            raise KeyError(f"unknown predictors: {missing}")
+        if not updates:
+            return self._bank_generation
+        gen = self._bank_generation + 1
+
+        new_predictors = dict(self.predictors)
+        for name, qm in updates.items():
+            pred = new_predictors[name]
+            new_predictors[name] = pred.with_updated_pipeline(
+                pred.pipeline.with_quantile_map(qm))
+
+        new_banks: dict[tuple[str, ...], _BankEntry] = {}
+        for key, entry in self._banks.items():
+            touched = {i: updates[n] for i, n in enumerate(key) if n in updates}
+            if not touched:
+                new_banks[key] = entry
+                continue
+            pipelines = tuple(new_predictors[n].pipeline for n in key)
+            # the with_rows fast path (scatter only the refreshed T^Q rows)
+            # is sound only if the cached bank was built from the predictors'
+            # CURRENT pipelines; a predictor redeployed in place leaves a
+            # stale entry whose other rows carry the dead pipeline's T^C/A —
+            # patching and re-pinning it would serve stale parameters forever
+            entry_fresh = len(entry.pipelines) == len(key) and all(
+                ep is self.predictors[n].pipeline
+                for ep, n in zip(entry.pipelines, key))
+            bank = None
+            if entry_fresh:
+                try:
+                    bank = entry.bank.with_rows(touched, generation=gen)
+                except ValueError:
+                    pass  # a refreshed table wider than the bank
+            if bank is None:
+                bank = TransformBank.from_params(
+                    [(p.betas, p.weights, p.src_quantiles, p.ref_quantiles)
+                     for p in pipelines], generation=gen)
+            new_banks[key] = _BankEntry(pipelines, bank)
+
+        # the publish point: whole-reference swaps, never in-place edits
+        self.predictors = new_predictors
+        self._banks = new_banks
+        self._bank_generation = gen
+        self.metrics["bank_generation"] = gen
+        return gen
 
     # ------------------------------------------------------------------- data
     def _model_dim(self, pred: Predictor) -> int:
@@ -136,22 +220,28 @@ class MuseServer:
         pred = self.predictors[self.routing.resolve(intent).live]
         return "+".join(pred.model_names)
 
-    def _bank_for(self, names: tuple[str, ...]) -> TransformBank:
+    def _bank_for(self, names: tuple[str, ...],
+                  predictors: dict[str, Predictor] | None = None,
+                  banks: dict[tuple[str, ...], _BankEntry] | None = None,
+                  ) -> TransformBank:
         """Build (or fetch) the stacked transform bank for these predictors.
 
-        Cache entries pin the source pipelines; a ``swap_transformation`` /
+        Cache entries pin the source pipelines; a ``publish_quantile_maps`` /
         redeploy replaces the pipeline object, failing the identity check
-        and rebuilding the bank — banks never serve stale parameters."""
-        pipelines = tuple(self.predictors[n].pipeline for n in names)
-        cached = self._banks.get(names)
-        if cached is not None and len(cached[0]) == len(pipelines) and all(
-                a is b for a, b in zip(cached[0], pipelines)):
-            return cached[1]
-        bank = TransformBank.from_params([
-            (p.betas, p.weights, p.src_quantiles, p.ref_quantiles)
-            for p in pipelines
-        ])
-        self._banks[names] = (pipelines, bank)
+        and rebuilding the bank — banks never serve stale parameters.
+        ``predictors``/``banks`` are the dispatch-time snapshots; lookups go
+        through them so a concurrent publish can't produce a torn read."""
+        predictors = self.predictors if predictors is None else predictors
+        banks = self._banks if banks is None else banks
+        pipelines = tuple(predictors[n].pipeline for n in names)
+        cached = banks.get(names)
+        if cached is not None and len(cached.pipelines) == len(pipelines) \
+                and all(a is b for a, b in zip(cached.pipelines, pipelines)):
+            return cached.bank
+        bank = TransformBank.from_params(
+            [(p.betas, p.weights, p.src_quantiles, p.ref_quantiles)
+             for p in pipelines], generation=self._bank_generation)
+        banks[names] = _BankEntry(pipelines, bank)
         return bank
 
     def score(self, request: ScoringRequest) -> ScoringResponse:
@@ -162,18 +252,27 @@ class MuseServer:
         (shared expert-model set); each group costs one model executable
         call plus ONE tenant-indexed banked kernel dispatch, whatever mix of
         tenants and predictors the group contains."""
+        # dispatch-time snapshots: a publish swaps these references, so the
+        # whole batch (live + shadows) scores against ONE consistent
+        # generation even if a refresh lands mid-flight
+        predictors = self.predictors
+        banks = self._banks
         resolutions = [self.routing.resolve(r.intent) for r in requests]
         by_group: dict[tuple[str, ...], list[int]] = {}
         for i, res in enumerate(resolutions):
-            key = self.predictors[res.live].model_names
+            key = predictors[res.live].model_names
             by_group.setdefault(key, []).append(i)
 
+        # per-call raw-score cache: (model group, request index) -> (K,) row.
+        # Live and shadow dispatches sharing a model group reuse expert
+        # outputs instead of re-running the models (shadow dedup).
+        raw_cache: dict[tuple[tuple[str, ...], int], np.ndarray] = {}
         responses: list[ScoringResponse | None] = [None] * len(requests)
         for idxs in by_group.values():
             t0 = time.perf_counter()  # per-dispatch latency, not cumulative
             pred_names = [resolutions[i].live for i in idxs]
             scores, raws, bank, tenant_idx = self._dispatch_banked(
-                requests, idxs, pred_names)
+                requests, idxs, pred_names, raw_cache, predictors, banks)
             latency_ms = (time.perf_counter() - t0) * 1000.0
             for j, i in enumerate(idxs):
                 responses[i] = ScoringResponse(
@@ -188,26 +287,50 @@ class MuseServer:
                                   tenant_idx)
 
         # shadow evaluations (never affect the response)
-        self._run_shadows(requests, resolutions)
+        self._run_shadows(requests, resolutions, raw_cache, predictors, banks)
         self.metrics["requests"] += len(requests)
         return responses  # type: ignore[return-value]
 
     def _dispatch_banked(
         self, requests, idxs: list[int], pred_names: list[str],
+        raw_cache: dict[tuple[tuple[str, ...], int], np.ndarray] | None = None,
+        predictors: dict[str, Predictor] | None = None,
+        banks: dict[tuple[str, ...], _BankEntry] | None = None,
     ) -> tuple[np.ndarray, np.ndarray, TransformBank, np.ndarray]:
         """One model-group dispatch: raw scores from the shared expert models,
         then the whole (possibly multi-predictor) group through one banked
         kernel call.  ``pred_names[j]`` is the predictor for row ``j``."""
+        predictors = self.predictors if predictors is None else predictors
         bank_names = tuple(sorted(set(pred_names)))  # canonical cache key
-        bank = self._bank_for(bank_names)
+        bank = self._bank_for(bank_names, predictors, banks)
         row_of = {n: r for r, n in enumerate(bank_names)}
-        pred0 = self.predictors[bank_names[0]]
+        pred0 = predictors[bank_names[0]]
+        group = pred0.model_names
         dim = self._model_dim(pred0) or len(requests[idxs[0]].features)
-        feats = np.stack([
-            self.features.enrich(requests[i].intent, requests[i].features, dim)
-            for i in idxs
-        ])
-        raws = pred0.raw_scores(feats)                       # (B, K)
+        rows: list[np.ndarray | None] = [None] * len(idxs)
+        fresh = list(range(len(idxs)))
+        if raw_cache is not None:
+            fresh = []
+            for j, i in enumerate(idxs):
+                hit = raw_cache.get((group, i))
+                if hit is None:
+                    fresh.append(j)
+                else:
+                    rows[j] = hit
+        if fresh:
+            feats = np.stack([
+                self.features.enrich(requests[idxs[j]].intent,
+                                     requests[idxs[j]].features, dim)
+                for j in fresh
+            ])
+            computed = np.asarray(pred0.raw_scores(feats))   # (len(fresh), K)
+            self.metrics["model_group_calls"] += 1
+            self.metrics["model_calls"] += len(group)
+            for r, j in enumerate(fresh):
+                rows[j] = computed[r]
+                if raw_cache is not None:
+                    raw_cache[(group, idxs[j])] = computed[r]
+        raws = np.stack(rows)                                # (B, K)
         tenant_idx = np.asarray([row_of[n] for n in pred_names], np.int32)
         if self.config.fused_kernel:
             scores = ops.score_pipeline_banked(
@@ -243,19 +366,26 @@ class MuseServer:
                 self._estimators[key] = est
             est.update(agg[rows])
 
-    def _run_shadows(self, requests, resolutions) -> None:
+    def _run_shadows(self, requests, resolutions,
+                     raw_cache: dict | None = None,
+                     predictors: dict[str, Predictor] | None = None,
+                     banks: dict[tuple[str, ...], _BankEntry] | None = None,
+                     ) -> None:
         # shadow rows are (request, shadow-predictor) pairs, grouped by the
-        # shadow's model group and dispatched through the same banked path
+        # shadow's model group and dispatched through the same banked path.
+        # ``raw_cache`` carries the live dispatches' expert outputs: a shadow
+        # sharing its request's live model group reuses them (no re-run).
+        predictors = self.predictors if predictors is None else predictors
         by_group: dict[tuple[str, ...], tuple[list[int], list[str]]] = {}
         for i, res in enumerate(resolutions):
             for s in res.shadows:
-                key = self.predictors[s].model_names
+                key = predictors[s].model_names
                 idxs, names = by_group.setdefault(key, ([], []))
                 idxs.append(i)
                 names.append(s)
         for idxs, shadow_names in by_group.values():
             scores, raws, _, _ = self._dispatch_banked(
-                requests, idxs, shadow_names)
+                requests, idxs, shadow_names, raw_cache, predictors, banks)
             for j, i in enumerate(idxs):
                 self.sink.write(ShadowRecord(
                     request_id=requests[i].request_id,
@@ -268,6 +398,15 @@ class MuseServer:
                 self.metrics["shadow_evals"] += 1
 
     # --------------------------------------------------------------- refresh
+    def estimator_streams(self) -> dict[tuple[str, str],
+                                        StreamingQuantileEstimator]:
+        """Live (tenant, predictor) -> estimator map (control-plane view).
+
+        Streams whose predictor has since been decommissioned are excluded —
+        the calibration controller must never refit a dead pipeline."""
+        return {k: est for k, est in self._estimators.items()
+                if k[1] in self.predictors}
+
     def calibration_ready(self, tenant: str, predictor: str) -> bool:
         """Eq. 5 gate: enough live events for a trustworthy custom T^Q?"""
         est = self._estimators.get((tenant, predictor))

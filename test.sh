@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Test runner: CPU-hosted multi-device JAX + src-layout imports.
+#
+#   ./test.sh              fast suite (excludes -m slow scenario campaigns)
+#   ./test.sh --slow       only the slow scenario tests
+#   ./test.sh --all        everything (what CI tier-1 runs)
+#   ./test.sh [pytest args...]   extra args forwarded to pytest
+set -euo pipefail
+cd "$(dirname "$0")"
+
+# 8 virtual CPU devices so mesh/sharding tests exercise real multi-device
+# paths without a TPU (standard jax_pallas CI idiom).
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+case "${1:-}" in
+  --slow) shift; exec python -m pytest -q -m slow "$@" ;;
+  --all)  shift; exec python -m pytest -q "$@" ;;
+  *)      exec python -m pytest -q -m "not slow" "$@" ;;
+esac

@@ -125,6 +125,49 @@ class TestServerDataPlane:
         assert resp.predictor == "p-wide"
         assert 0.0 <= resp.score <= 1.0
 
+    def test_shadow_dedup_reuses_raw_scores_within_model_group(self):
+        """A shadow predictor sharing its request's live model group must NOT
+        re-run the expert models: raw scores are cached per (group, request)
+        inside score_batch, so the shadow costs one extra banked kernel
+        dispatch but zero extra model executions."""
+        rules = [ScoringRule(Condition(tenants=("bank1",)), "p-bank1"),
+                 ScoringRule(Condition(), "p-global")]
+        shadows = [ShadowRule(Condition(tenants=("bank1",)), ("p-shadow-same",))]
+        server = MuseServer(RoutingTable(tuple(rules), tuple(shadows),
+                                         version="v1"))
+        factories = {"m1": lambda: _linear_model(1),
+                     "m2": lambda: _linear_model(2)}
+        server.deploy(PredictorSpec("p-bank1", ("m1", "m2"), (0.2, 0.2),
+                                    (1.0, 1.0), _qm()), factories)
+        server.deploy(PredictorSpec("p-shadow-same", ("m1", "m2"), (0.5, 0.8),
+                                    (2.0, 1.0), _qm()), factories)
+        server.deploy(PredictorSpec.single("p-global", "m1", _qm()), factories)
+        reqs = [_req("bank1", seed=i) for i in range(4)]
+        before = dict(server.metrics)
+        resps = server.score_batch(reqs)
+        # live + shadow each take a banked kernel dispatch...
+        assert server.metrics["kernel_dispatches"] - before["kernel_dispatches"] == 2
+        # ...but the {m1,m2} group executed exactly ONCE (2 model forwards)
+        assert server.metrics["model_group_calls"] - before["model_group_calls"] == 1
+        assert server.metrics["model_calls"] - before["model_calls"] == 2
+        # shadow records reused the live dispatch's raw expert scores
+        recs = server.sink.records("p-shadow-same")
+        assert len(recs) == 4
+        for resp, rec in zip(resps, recs):
+            assert rec.raw_scores == resp.raw_scores
+            assert rec.score != pytest.approx(resp.score, abs=1e-9)
+
+    def test_shadow_distinct_model_group_still_runs_models(self):
+        """Control case: a shadow on a DIFFERENT model group cannot reuse
+        raw scores — it pays its own model execution."""
+        server = _basic_server(extra_shadow=True)  # shadow adds m3
+        before = dict(server.metrics)
+        server.score_batch([_req("bank1", seed=3)])
+        assert server.metrics["kernel_dispatches"] - before["kernel_dispatches"] == 2
+        assert server.metrics["model_group_calls"] - before["model_group_calls"] == 2
+        # live {m1,m2} = 2 forwards + shadow {m1,m2,m3} = 3 forwards
+        assert server.metrics["model_calls"] - before["model_calls"] == 5
+
     def test_calibration_refresh_gate_and_fit(self):
         cfgd = ServerConfig(refresh_alert_rate=0.05, refresh_rel_error=0.5)
         server = _basic_server()
