@@ -103,6 +103,16 @@ def main() -> None:
          f"quantile_update_speedup={r['quantile_update_speedup']:.1f}x;"
          f"max_abs_err={r['max_abs_err_vs_oracle']:.2e}")
 
+    # ---- async banked dispatch engine vs synchronous ServerBatcher ----------
+    from benchmarks import bench_async_engine
+    r = bench_async_engine.run(quick=quick)
+    _csv("async_engine", r["us_per_event_async"],
+         f"speedup={r['speedup_vs_sync']:.2f}x;"
+         f"speedup_fixed_windows={r['speedup_fixed_vs_sync']:.2f}x;"
+         f"events_per_s_async={r['events_per_s_async']:.0f};"
+         f"events_per_s_sync={r['events_per_s_sync']:.0f};"
+         f"tenants={r['tenants']};max_abs_err={r['max_abs_err']:.2e}")
+
     # ---- kernels -------------------------------------------------------------
     t0 = time.perf_counter()
     from benchmarks import bench_kernels

@@ -286,13 +286,13 @@ class TransformBank:
 
     def pre_quantile(self, expert_scores: Array, tenant_idx: Array) -> Array:
         """Per-row T^Q input (corrected weighted aggregate) — what a
-        refreshed T^Q must be fitted on; see TransformPipeline.pre_quantile."""
-        tenant_idx = jnp.asarray(tenant_idx, jnp.int32)
-        betas = jnp.take(self.betas, tenant_idx, axis=0)      # (B, K)
-        weights = jnp.take(self.weights, tenant_idx, axis=0)  # (B, K)
-        corrected = posterior_correction(expert_scores, betas)
-        w = weights / jnp.sum(weights, axis=-1, keepdims=True)
-        return jnp.sum(corrected * w, axis=-1)
+        refreshed T^Q must be fitted on; see TransformPipeline.pre_quantile.
+
+        One jitted call: this sits on the serving hot path (quantile
+        tracking, stage 3 of the banked dispatch), where an unfused chain of
+        small dispatches measurably contends with the other engine stages."""
+        return _banked_pre_quantile(expert_scores, tenant_idx, self.betas,
+                                    self.weights)
 
     def with_rows(
         self,
@@ -375,6 +375,17 @@ class TransformBank:
             ref_quantiles=jnp.stack([_pad_n(qr) for _, _, _, qr in rows]),
             generation=generation,
         )
+
+
+@jax.jit
+def _banked_pre_quantile(expert_scores: Array, tenant_idx: Array,
+                         betas: Array, weights: Array) -> Array:
+    tenant_idx = jnp.asarray(tenant_idx, jnp.int32)
+    b = jnp.take(betas, tenant_idx, axis=0)       # (B, K)
+    w = jnp.take(weights, tenant_idx, axis=0)     # (B, K)
+    corrected = posterior_correction(expert_scores, b)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.sum(corrected * w, axis=-1)
 
 
 def banked_score_pipeline(

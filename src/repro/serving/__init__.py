@@ -1,4 +1,32 @@
-"""Serving runtime: the MUSE data plane + rollout/calibration control plane."""
+"""Serving runtime: the MUSE data plane + rollout/calibration control plane.
+
+Stage/epoch model of the banked dispatch
+----------------------------------------
+
+A mixed-tenant window flows through three independently schedulable stages
+(``MuseServer.run_models`` -> ``MuseServer.apply_transforms`` ->
+``MuseServer.track``).  ``ServerBatcher`` runs them back-to-back on the
+caller's thread (synchronous baseline); ``AsyncDispatchEngine`` pipelines
+them on three single-worker stage executors, so window *N*'s expert models
+execute while window *N−1* runs the banked transform kernel and window
+*N−2*'s quantile-estimator updates land.
+
+Consistency comes from two counters:
+
+* **generation** — bumped by every atomic control-plane publish
+  (``MuseServer.publish_quantile_maps``).  All served state lives in one
+  immutable ``_ControlPlane`` (predictors + transform banks + generation)
+  swapped in a single reference assignment; each stage snapshots the plane
+  ONCE, so every response is internally consistent with exactly one bank
+  generation (stamped as ``ScoringResponse.bank_generation``) and the
+  generations observed by any one stream are monotone.
+* **epoch** — bumped by the engine each time a control operation (e.g. a
+  ``CalibrationController.refresh_fleet`` pass via
+  ``AsyncDispatchEngine.schedule_refresh``) runs at a stage boundary on the
+  track executor — serialized with the estimator reservoirs it reads while
+  model/transform stages keep streaming.  In-flight windows finish on their
+  snapshotted generation; the next stage picks up the published one.
+"""
 from repro.serving.batching import MicroBatcher, ServerBatcher
 from repro.serving.calibration import (
     CalibrationController,
@@ -6,14 +34,16 @@ from repro.serving.calibration import (
     RefreshPolicy,
     RefreshResult,
 )
+from repro.serving.engine import AsyncDispatchEngine
 from repro.serving.rollout import Replica, ReplicaSet, RollingUpdate
 from repro.serving.server import FeatureStore, MuseServer, ServerConfig
 from repro.serving.shadow import ShadowSink
 from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
 
 __all__ = [
-    "MicroBatcher", "ServerBatcher", "Replica", "ReplicaSet", "RollingUpdate",
-    "CalibrationController", "CandidateReport", "RefreshPolicy",
-    "RefreshResult", "FeatureStore", "MuseServer", "ServerConfig",
-    "ShadowSink", "ScoringRequest", "ScoringResponse", "ShadowRecord",
+    "AsyncDispatchEngine", "MicroBatcher", "ServerBatcher", "Replica",
+    "ReplicaSet", "RollingUpdate", "CalibrationController", "CandidateReport",
+    "RefreshPolicy", "RefreshResult", "FeatureStore", "MuseServer",
+    "ServerConfig", "ShadowSink", "ScoringRequest", "ScoringResponse",
+    "ShadowRecord",
 ]

@@ -23,12 +23,14 @@ from repro.serving.types import ScoringRequest, ScoringResponse
 class MicroBatcher:
     """Accumulates requests; flushes per-key when size or age limits hit.
 
-    ``clock`` is injectable for deterministic tests.
+    ``clock`` is injectable so ``expired()``-based flushes are testable
+    without sleeps; the default is ``time.monotonic`` — wall-clock
+    adjustments must never age (or un-age) a window.
     """
 
     max_batch: int = 64
     max_wait_ms: float = 2.0
-    clock: Callable[[], float] = time.perf_counter
+    clock: Callable[[], float] = time.monotonic
 
     def __post_init__(self) -> None:
         self._pending: dict[str, list[ScoringRequest]] = collections.defaultdict(list)
@@ -56,6 +58,25 @@ class MicroBatcher:
     def flush_all(self) -> list[tuple[str, list[ScoringRequest]]]:
         return [(k, self._take(k)) for k in list(self._pending) if self._pending[k]]
 
+    def pending_for(self, key: str) -> int:
+        return len(self._pending.get(key, ()))
+
+    def take(self, key: str, n: int | None = None) -> list[ScoringRequest]:
+        """Flush one key's pending window, or its first ``n`` requests.
+
+        Used by the async engine's adaptive batching: when the model stage
+        is backlogged the engine defers the flush and later takes the
+        accumulated backlog in one (size-quantized) window.  A partial take
+        keeps the key's age clock unchanged — the remainder is OLDER than a
+        fresh window, so it must not be rejuvenated."""
+        pending = self._pending.get(key)
+        if not pending:
+            return []
+        if n is None or n >= len(pending):
+            return self._take(key)
+        batch, self._pending[key] = pending[:n], pending[n:]
+        return batch
+
     def _take(self, key: str) -> list[ScoringRequest]:
         batch = self._pending[key]
         self._pending[key] = []
@@ -75,6 +96,11 @@ class ServerBatcher:
     model group) and flushes full or aged-out windows straight into
     ``server.score_batch`` — which scores each window with one banked kernel
     dispatch regardless of how many tenants it mixes.
+
+    This is the SYNCHRONOUS driver: a flush runs the whole dispatch (models,
+    transform kernel, tracking) on the caller's thread before returning.
+    ``serving/engine.py::AsyncDispatchEngine`` pipelines the same stages
+    across windows instead — use it when throughput matters.
 
     ``server`` is any object with ``batch_key(intent)`` and
     ``score_batch(requests)`` (duck-typed to avoid a serving<->server import

@@ -86,6 +86,9 @@ class RefreshResult:
     refit_seconds: float
     validate_seconds: float
     publish_seconds: float
+    # engine stage-boundary counter when the pass was scheduled from an
+    # AsyncDispatchEngine (-1 for direct/synchronous invocations)
+    epoch: int = -1
 
     def _with(self, status: str) -> list[CandidateReport]:
         return [r for r in self.reports if r.status == status]
@@ -179,9 +182,13 @@ class CalibrationController:
         return tuple(reasons), drift, rate
 
     # --------------------------------------------------------------- refresh
-    def refresh_fleet(self, only: "set[tuple[str, str]] | None" = None
-                      ) -> RefreshResult:
+    def refresh_fleet(self, only: "set[tuple[str, str]] | None" = None,
+                      *, epoch: int = -1) -> RefreshResult:
         """One full pass: scan, gate, vectorized refit, validate, publish.
+
+        ``epoch`` is the engine stage-boundary counter when the pass is
+        scheduled through ``AsyncDispatchEngine.schedule_refresh`` (stamped
+        into the result; -1 for direct synchronous calls).
 
         ``only`` restricts the pass to the given (tenant, predictor) keys —
         the drift-triggered path (``drift.py::CalibrationRefreshController``)
@@ -292,6 +299,6 @@ class CalibrationController:
         result = RefreshResult(
             generation=generation, reports=tuple(reports),
             refit_seconds=refit_s, validate_seconds=validate_s,
-            publish_seconds=publish_s)
+            publish_seconds=publish_s, epoch=epoch)
         self.history.append(result)
         return result

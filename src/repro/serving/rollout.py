@@ -34,10 +34,15 @@ class Replica:
     ready: bool = False
     warmup_seconds: float = 0.0
     served: int = 0
+    # optional AsyncDispatchEngine serving this replica's traffic: requests
+    # route through its pipelined stage path instead of the synchronous
+    # score_batch (duck-typed: needs score_batch; close() used on drain)
+    engine: "object | None" = None
 
     def serve(self, requests: list[ScoringRequest]) -> list[ScoringResponse]:
         self.served += len(requests)
-        return self.server.score_batch(requests)
+        target = self.engine if self.engine is not None else self.server
+        return target.score_batch(requests)
 
 
 class ReplicaSet:
@@ -83,18 +88,27 @@ class RollingUpdate:
         schema_dim: int,
         warmup_batch_sizes: tuple[int, ...] = (1, 8, 64),
         calibration_factory: Callable[["object"], "object"] | None = None,
+        engine_factory: Callable[["object"], "object"] | None = None,
     ) -> None:
         """``calibration_factory``: optional ``server -> CalibrationController``
         hook.  When set, every promoted replica triggers a fleet calibration
         refresh right after its warm-up — the paper's Sec.-3.1 lifecycle
         where a model promotion automatically refits T^Q from the live
-        streams the replica carries (no out-of-band operator step)."""
+        streams the replica carries (no out-of-band operator step).
+
+        ``engine_factory``: optional ``server -> AsyncDispatchEngine`` hook
+        (must return a STARTED engine).  When set, every promoted replica
+        serves through its own pipelined engine, the promotion refresh is
+        scheduled at a stage boundary via ``engine.schedule_refresh``
+        (never a quiesce), and a drained replica's engine is closed — its
+        barrier guarantees no in-flight window is dropped."""
         self.rs = replica_set
         self.make_server = make_server
         self.new_version = new_version
         self.schema_dim = schema_dim
         self.warmup_batch_sizes = warmup_batch_sizes
         self.calibration_factory = calibration_factory
+        self.engine_factory = engine_factory
         self.refreshes: list["object"] = []   # RefreshResult per promotion
         self._next_id = max((r.replica_id for r in replica_set.replicas),
                             default=-1) + 1
@@ -115,6 +129,8 @@ class RollingUpdate:
             # surge: create the new replica (not yet ready)
             new = Replica(self._next_id, self.make_server(), self.new_version)
             self._next_id += 1
+            if self.engine_factory is not None:
+                new.engine = self.engine_factory(new.server)
             self.rs.replicas.append(new)
             self._log("surge", new.replica_id)
             yield "surged"
@@ -134,14 +150,27 @@ class RollingUpdate:
             # drains (clients never see the un-refreshed new model for
             # longer than one warm-up window)
             if self.calibration_factory is not None:
-                self.refreshes.append(
-                    self.calibration_factory(new.server).refresh_fleet())
+                ctrl = self.calibration_factory(new.server)
+                if new.engine is not None \
+                        and hasattr(new.engine, "schedule_refresh"):
+                    # refresh lands at a stage boundary of the live engine:
+                    # in-flight windows finish on their snapshotted
+                    # generation, the next transform stage picks up the new.
+                    # Bounded wait: a wedged track executor must abort the
+                    # promotion loudly, not hang the fleet mid-surge.
+                    self.refreshes.append(
+                        new.engine.schedule_refresh(ctrl).result(
+                            timeout=300.0))
+                else:
+                    self.refreshes.append(ctrl.refresh_fleet())
                 self._log("calibrate", new.replica_id)
                 yield "calibrated"
 
             # drain the old replica (maxUnavailable=0: only after new is ready)
             victim.ready = False
             self.rs.replicas.remove(victim)
+            if victim.engine is not None and hasattr(victim.engine, "close"):
+                victim.engine.close()   # barrier: no in-flight window dropped
             self._log("drain", victim.replica_id)
             yield "drained"
         self._log("done", -1)

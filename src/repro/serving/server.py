@@ -9,6 +9,21 @@ whole group, and one tenant-indexed banked kernel dispatch
 (:func:`repro.kernels.ops.score_pipeline_banked`) applies every predictor's
 T^C/A/T^Q in a single ``pallas_call`` — no per-predictor Python loop.
 
+The banked dispatch is split into three independently schedulable stages so
+the async engine (``serving/engine.py``) can pipeline them across windows:
+
+  * :meth:`MuseServer.run_models`       — expert-model execution (raw scores)
+  * :meth:`MuseServer.apply_transforms` — ONE banked T^C/A/T^Q kernel call
+  * :meth:`MuseServer.track`            — quantile-estimator reservoir updates
+
+Each stage reads served state through a :class:`_ControlPlane` snapshot —
+ONE attribute read yields a mutually consistent (predictors, banks,
+generation) triple, because every control-plane operation (deploy,
+decommission, calibration publish) swaps the whole plane in a single
+reference assignment.  A stage that snapshotted the old plane finishes on
+the old generation; the next stage pickup sees the complete new one — no
+torn reads, even with a concurrent publish from another thread.
+
 The server is the *data plane*; control-plane operations (deploying
 predictors, publishing routing tables, triggering calibration refreshes) are
 explicit methods invoked by the rollout controller — never by clients.
@@ -16,6 +31,7 @@ explicit methods invoked by the rollout controller — never by clients.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import zlib
 from typing import Any, Callable, Mapping
@@ -74,6 +90,17 @@ class ServerConfig:
     fused_kernel: bool = True
 
 
+def _shape_bucket(n: int) -> int:
+    """Next power of two >= n: serving batches are padded up to a bucket so
+    the set of XLA specializations stays bounded (one per bucket, not one
+    per arbitrary window length — an adaptive engine window or a remainder
+    flush would otherwise each pay a fresh compile on the hot path)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
 @dataclasses.dataclass(frozen=True)
 class _BankEntry:
     """A cached model-group bank pinned to the pipelines it was built from.
@@ -87,46 +114,116 @@ class _BankEntry:
     bank: TransformBank
 
 
+@dataclasses.dataclass(frozen=True)
+class _ControlPlane:
+    """One immutable view of everything a dispatch stage reads.
+
+    ``predictors`` and ``banks`` are plain dicts, but the PLANE object is
+    what gets swapped: every control-plane mutation builds fresh dicts and
+    replaces ``MuseServer._plane`` in a single reference assignment, so a
+    stage that reads ``server.plane`` once can never observe predictors of
+    one generation with banks of another.  ``banks`` doubles as the lazy
+    bank-build cache; inserting a missing entry is idempotent and therefore
+    safe to do from a dispatch stage (a concurrently swapped-out plane just
+    drops the cached entry — never serves stale parameters).
+    """
+
+    predictors: dict[str, Predictor]
+    banks: dict[tuple[str, ...], _BankEntry]
+    generation: int
+
+
 class MuseServer:
     def __init__(self, routing: RoutingTable,
                  config: ServerConfig | None = None) -> None:
         self.pool = ModelPool()
-        self.predictors: dict[str, Predictor] = {}
         self.routing = routing
         self.sink = ShadowSink()
         self.features = FeatureStore()
         self.config = config or ServerConfig()
         # per (tenant, predictor) streaming estimators for calibration refresh
         self._estimators: dict[tuple[str, str], StreamingQuantileEstimator] = {}
-        # model-group transform banks, keyed by ordered predictor names.
-        # The dict REFERENCE is swapped wholesale on a calibration publish
-        # (never mutated row-by-row across a publish): a dispatch snapshots
-        # it once, so an in-flight window finishes on the old generation and
-        # the next window sees the new one — no torn reads.
-        self._banks: dict[tuple[str, ...], _BankEntry] = {}
-        self._bank_generation = 0
+        # THE served control-plane state: swapped wholesale on every deploy /
+        # decommission / calibration publish (never mutated across a publish).
+        # A dispatch stage snapshots it once, so an in-flight window finishes
+        # on the old generation and the next stage sees the new one — no
+        # torn reads.
+        self._plane = _ControlPlane(predictors={}, banks={}, generation=0)
         self.metrics: dict[str, float] = {
             "requests": 0, "shadow_evals": 0, "kernel_dispatches": 0,
             "model_group_calls": 0, "model_calls": 0, "bank_generation": 0}
+        # dict `+=` is load/add/store — racy once the engine runs stages on
+        # several threads (e.g. two model-group lanes); serialize the bumps
+        self._metrics_lock = threading.Lock()
+        # control-plane mutations are read-modify-writes of _plane; two
+        # concurrent mutators (e.g. deploy on the main thread vs a refresh
+        # publish on the engine's track thread) must not lose each other's
+        # update, so every mutator holds this lock across its RMW.  Dispatch
+        # stages never take it — they only snapshot the reference.
+        self._control_lock = threading.Lock()
+
+    def bump_metric(self, key: str, n: float = 1) -> None:
+        with self._metrics_lock:
+            self.metrics[key] += n
+
+    # ------------------------------------------------------------ plane views
+    @property
+    def plane(self) -> _ControlPlane:
+        """The current control-plane snapshot (ONE consistent read)."""
+        return self._plane
+
+    @property
+    def predictors(self) -> dict[str, Predictor]:
+        return self._plane.predictors
+
+    @property
+    def _banks(self) -> dict[tuple[str, ...], _BankEntry]:
+        return self._plane.banks
 
     @property
     def bank_generation(self) -> int:
         """Monotone counter of atomic calibration publishes."""
-        return self._bank_generation
+        return self._plane.generation
 
     # ------------------------------------------------------------------ control
     def deploy(self, spec: PredictorSpec,
                model_factories: Mapping[str, Callable[[], Any]],
                model_costs: Mapping[str, float] | None = None) -> Predictor:
         pred = deploy_predictor(spec, self.pool, model_factories, model_costs)
-        self.predictors[spec.name] = pred
+        with self._control_lock:
+            plane = self._plane
+            # an in-place redeploy changes served parameters under an
+            # existing name, so it must bump the generation: otherwise two
+            # responses scored before/after it would carry the same
+            # ``bank_generation`` stamp for different T^C/A/T^Q.  (Cached
+            # banks pinned to the dead pipeline fail the identity check and
+            # rebuild lazily.)  First-time deploys leave the counter alone.
+            gen = plane.generation + (1 if spec.name in plane.predictors
+                                      else 0)
+            predictors = dict(plane.predictors)
+            predictors[spec.name] = pred
+            self._plane = dataclasses.replace(plane, predictors=predictors,
+                                              generation=gen)
+            self.metrics["bank_generation"] = gen
         return pred
 
     def decommission(self, name: str) -> None:
-        pred = self.predictors.pop(name)
+        with self._control_lock:
+            plane = self._plane
+            predictors = dict(plane.predictors)
+            pred = predictors.pop(name)
+            # drop cached banks referencing the dead predictor's pipeline.
+            # dict() first: a concurrent dispatch stage may lazily insert a
+            # cache entry mid-iteration (the copy itself is GIL-atomic).
+            # Generation bumps so a later deploy under the same name cannot
+            # serve different parameters under an already-used stamp.
+            banks = {k: v for k, v in dict(plane.banks).items()
+                     if name not in k}
+            gen = plane.generation + 1
+            self._plane = dataclasses.replace(plane, predictors=predictors,
+                                              banks=banks, generation=gen)
+            self.metrics["bank_generation"] = gen
         pred.release(self.pool)
-        # drop cached banks referencing the dead predictor's pipeline
-        self._banks = {k: v for k, v in self._banks.items() if name not in k}
         # and its estimator streams: a future predictor redeployed under the
         # same name has a different score distribution — refitting T^Q from
         # the dead model's stream would publish a miscalibrated map
@@ -150,29 +247,37 @@ class MuseServer:
 
         The fleet-wide calibration refresh (Sec. 3.1, `serving/calibration.py`)
         lands here: every updated predictor pipeline AND every affected
-        model-group bank is rebuilt first, then the ``predictors`` / ``_banks``
-        references are swapped in one step under a bumped generation.  A
-        dispatch that already snapshotted the old structures finishes on the
-        old parameters; the next window sees the complete new generation —
+        model-group bank is rebuilt first, then the whole control plane is
+        swapped in one reference assignment under a bumped generation.  A
+        dispatch stage that already snapshotted the old plane finishes on the
+        old parameters; the next stage sees the complete new generation —
         a batch can never mix rows from two calibration versions.
 
         Returns the new bank generation.
         """
-        missing = [n for n in updates if n not in self.predictors]
+        with self._control_lock:
+            return self._publish_quantile_maps_locked(updates)
+
+    def _publish_quantile_maps_locked(self, updates: Mapping[str, QuantileMap]
+                                      ) -> int:
+        plane = self._plane
+        missing = [n for n in updates if n not in plane.predictors]
         if missing:
             raise KeyError(f"unknown predictors: {missing}")
         if not updates:
-            return self._bank_generation
-        gen = self._bank_generation + 1
+            return plane.generation
+        gen = plane.generation + 1
 
-        new_predictors = dict(self.predictors)
+        new_predictors = dict(plane.predictors)
         for name, qm in updates.items():
             pred = new_predictors[name]
             new_predictors[name] = pred.with_updated_pipeline(
                 pred.pipeline.with_quantile_map(qm))
 
         new_banks: dict[tuple[str, ...], _BankEntry] = {}
-        for key, entry in self._banks.items():
+        # dict() first: a dispatch stage on another thread may lazily insert
+        # a bank-cache entry mid-iteration (the copy itself is GIL-atomic)
+        for key, entry in dict(plane.banks).items():
             touched = {i: updates[n] for i, n in enumerate(key) if n in updates}
             if not touched:
                 new_banks[key] = entry
@@ -184,7 +289,7 @@ class MuseServer:
             # stale entry whose other rows carry the dead pipeline's T^C/A —
             # patching and re-pinning it would serve stale parameters forever
             entry_fresh = len(entry.pipelines) == len(key) and all(
-                ep is self.predictors[n].pipeline
+                ep is plane.predictors[n].pipeline
                 for ep, n in zip(entry.pipelines, key))
             bank = None
             if entry_fresh:
@@ -198,10 +303,8 @@ class MuseServer:
                      for p in pipelines], generation=gen)
             new_banks[key] = _BankEntry(pipelines, bank)
 
-        # the publish point: whole-reference swaps, never in-place edits
-        self.predictors = new_predictors
-        self._banks = new_banks
-        self._bank_generation = gen
+        # the publish point: ONE whole-plane swap, never in-place edits
+        self._plane = _ControlPlane(new_predictors, new_banks, gen)
         self.metrics["bank_generation"] = gen
         return gen
 
@@ -217,94 +320,96 @@ class MuseServer:
         Requests from different tenants/predictors that share the same
         expert-model set batch together — one executable call plus one
         banked kernel dispatch serves the whole window."""
-        pred = self.predictors[self.routing.resolve(intent).live]
-        return "+".join(pred.model_names)
+        return self.group_key(self.routing.resolve(intent))
+
+    def group_key(self, resolution) -> str:
+        """``batch_key`` for an already-resolved intent — the async engine
+        resolves once at submit and derives the key from the resolution
+        (no double resolve), through this one source of truth."""
+        return "+".join(self.predictors[resolution.live].model_names)
+
+    def build_responses(self, requests, idxs: list[int],
+                        pred_names: list[str], scores: np.ndarray,
+                        raws: np.ndarray, bank: TransformBank,
+                        routing_version: str, latency_ms: float
+                        ) -> list[ScoringResponse]:
+        """Assemble one window's responses (shared by sync + async drivers;
+        ``tolist`` conversions are C-speed).  Row ``j`` answers request
+        ``requests[idxs[j]]``."""
+        score_list = scores.tolist()
+        raw_rows = np.atleast_2d(raws).tolist()
+        return [
+            ScoringResponse(
+                request_id=requests[i].request_id,
+                score=score_list[j],
+                predictor=pred_names[j],
+                routing_version=routing_version,
+                latency_ms=latency_ms,
+                raw_scores=tuple(raw_rows[j]),
+                bank_generation=bank.generation,
+            )
+            for j, i in enumerate(idxs)
+        ]
+
+    def write_shadow_records(self, requests, idxs: list[int],
+                             shadow_names: list[str], scores: np.ndarray,
+                             raws: np.ndarray, routing_version: str) -> None:
+        """Sink one shadow window's records (shared by sync + async)."""
+        score_list = scores.tolist()
+        raw_rows = np.atleast_2d(raws).tolist()
+        for j, i in enumerate(idxs):
+            self.sink.write(ShadowRecord(
+                request_id=requests[i].request_id,
+                tenant=requests[i].intent.tenant,
+                predictor=shadow_names[j],
+                score=score_list[j],
+                raw_scores=tuple(raw_rows[j]),
+                routing_version=routing_version,
+            ))
+            self.bump_metric("shadow_evals")
 
     def _bank_for(self, names: tuple[str, ...],
-                  predictors: dict[str, Predictor] | None = None,
-                  banks: dict[tuple[str, ...], _BankEntry] | None = None,
-                  ) -> TransformBank:
+                  plane: _ControlPlane | None = None) -> TransformBank:
         """Build (or fetch) the stacked transform bank for these predictors.
 
         Cache entries pin the source pipelines; a ``publish_quantile_maps`` /
         redeploy replaces the pipeline object, failing the identity check
         and rebuilding the bank — banks never serve stale parameters.
-        ``predictors``/``banks`` are the dispatch-time snapshots; lookups go
-        through them so a concurrent publish can't produce a torn read."""
-        predictors = self.predictors if predictors is None else predictors
-        banks = self._banks if banks is None else banks
-        pipelines = tuple(predictors[n].pipeline for n in names)
-        cached = banks.get(names)
+        ``plane`` is the stage-time snapshot; lookups go through it so a
+        concurrent publish can't produce a torn read."""
+        plane = self._plane if plane is None else plane
+        pipelines = tuple(plane.predictors[n].pipeline for n in names)
+        cached = plane.banks.get(names)
         if cached is not None and len(cached.pipelines) == len(pipelines) \
                 and all(a is b for a, b in zip(cached.pipelines, pipelines)):
             return cached.bank
         bank = TransformBank.from_params(
             [(p.betas, p.weights, p.src_quantiles, p.ref_quantiles)
-             for p in pipelines], generation=self._bank_generation)
-        banks[names] = _BankEntry(pipelines, bank)
+             for p in pipelines], generation=plane.generation)
+        plane.banks[names] = _BankEntry(pipelines, bank)
         return bank
 
     def score(self, request: ScoringRequest) -> ScoringResponse:
         return self.score_batch([request])[0]
 
-    def score_batch(self, requests: list[ScoringRequest]) -> list[ScoringResponse]:
-        """Scores a mixed-tenant batch: requests are grouped by model group
-        (shared expert-model set); each group costs one model executable
-        call plus ONE tenant-indexed banked kernel dispatch, whatever mix of
-        tenants and predictors the group contains."""
-        # dispatch-time snapshots: a publish swaps these references, so the
-        # whole batch (live + shadows) scores against ONE consistent
-        # generation even if a refresh lands mid-flight
-        predictors = self.predictors
-        banks = self._banks
-        resolutions = [self.routing.resolve(r.intent) for r in requests]
-        by_group: dict[tuple[str, ...], list[int]] = {}
-        for i, res in enumerate(resolutions):
-            key = predictors[res.live].model_names
-            by_group.setdefault(key, []).append(i)
+    # ----------------------------------------------------- dispatch stages
+    def run_models(self, requests: list[ScoringRequest], idxs: list[int],
+                   pred_names: list[str],
+                   raw_cache: dict[tuple[tuple[str, ...], int], np.ndarray]
+                   | None = None,
+                   plane: _ControlPlane | None = None) -> np.ndarray:
+        """Stage 1 of a banked dispatch: execute the window's expert models.
 
-        # per-call raw-score cache: (model group, request index) -> (K,) row.
-        # Live and shadow dispatches sharing a model group reuse expert
-        # outputs instead of re-running the models (shadow dedup).
-        raw_cache: dict[tuple[tuple[str, ...], int], np.ndarray] = {}
-        responses: list[ScoringResponse | None] = [None] * len(requests)
-        for idxs in by_group.values():
-            t0 = time.perf_counter()  # per-dispatch latency, not cumulative
-            pred_names = [resolutions[i].live for i in idxs]
-            scores, raws, bank, tenant_idx = self._dispatch_banked(
-                requests, idxs, pred_names, raw_cache, predictors, banks)
-            latency_ms = (time.perf_counter() - t0) * 1000.0
-            for j, i in enumerate(idxs):
-                responses[i] = ScoringResponse(
-                    request_id=requests[i].request_id,
-                    score=float(scores[j]),
-                    predictor=pred_names[j],
-                    routing_version=self.routing.version,
-                    latency_ms=latency_ms,
-                    raw_scores=tuple(float(x) for x in np.atleast_1d(raws[j])),
-                )
-            self._track_quantiles(requests, idxs, pred_names, raws, bank,
-                                  tenant_idx)
-
-        # shadow evaluations (never affect the response)
-        self._run_shadows(requests, resolutions, raw_cache, predictors, banks)
-        self.metrics["requests"] += len(requests)
-        return responses  # type: ignore[return-value]
-
-    def _dispatch_banked(
-        self, requests, idxs: list[int], pred_names: list[str],
-        raw_cache: dict[tuple[tuple[str, ...], int], np.ndarray] | None = None,
-        predictors: dict[str, Predictor] | None = None,
-        banks: dict[tuple[str, ...], _BankEntry] | None = None,
-    ) -> tuple[np.ndarray, np.ndarray, TransformBank, np.ndarray]:
-        """One model-group dispatch: raw scores from the shared expert models,
-        then the whole (possibly multi-predictor) group through one banked
-        kernel call.  ``pred_names[j]`` is the predictor for row ``j``."""
-        predictors = self.predictors if predictors is None else predictors
-        bank_names = tuple(sorted(set(pred_names)))  # canonical cache key
-        bank = self._bank_for(bank_names, predictors, banks)
-        row_of = {n: r for r, n in enumerate(bank_names)}
-        pred0 = predictors[bank_names[0]]
+        One model executable call produces raw scores for the whole
+        (possibly multi-predictor) window; ``pred_names[j]`` is the predictor
+        for row ``j``.  ``raw_cache`` carries (model group, request index)
+        -> raw-score rows across dispatches of one batch, so live and shadow
+        windows sharing a model group run the experts once (shadow dedup).
+        Returns the (B, K) raw-score matrix.
+        """
+        plane = self._plane if plane is None else plane
+        bank_names = tuple(sorted(set(pred_names)))
+        pred0 = plane.predictors[bank_names[0]]
         group = pred0.model_names
         dim = self._model_dim(pred0) or len(requests[idxs[0]].features)
         rows: list[np.ndarray | None] = [None] * len(idxs)
@@ -318,38 +423,92 @@ class MuseServer:
                 else:
                     rows[j] = hit
         if fresh:
-            feats = np.stack([
-                self.features.enrich(requests[idxs[j]].intent,
-                                     requests[idxs[j]].features, dim)
-                for j in fresh
-            ])
-            computed = np.asarray(pred0.raw_scores(feats))   # (len(fresh), K)
-            self.metrics["model_group_calls"] += 1
-            self.metrics["model_calls"] += len(group)
+            feats = self._window_features(requests, idxs, fresh, dim)
+            pad = _shape_bucket(len(fresh)) - len(fresh)
+            if pad:  # bucketed batch shape: no per-length recompiles
+                feats = np.concatenate(
+                    [feats, np.zeros((pad,) + feats.shape[1:], np.float32)])
+            computed = np.asarray(pred0.raw_scores(feats))[:len(fresh)]
+            with self._metrics_lock:
+                self.metrics["model_group_calls"] += 1
+                self.metrics["model_calls"] += len(group)
             for r, j in enumerate(fresh):
                 rows[j] = computed[r]
                 if raw_cache is not None:
                     raw_cache[(group, idxs[j])] = computed[r]
-        raws = np.stack(rows)                                # (B, K)
+        return np.stack(rows)                                # (B, K)
+
+    def _window_features(self, requests, idxs: list[int], fresh: list[int],
+                         dim: int) -> np.ndarray:
+        """Assemble the (len(fresh), dim) model-input matrix.
+
+        Fast path: when every row already carries >= dim features of the
+        right dtype, ONE stack+slice replaces the per-row enrich calls —
+        the per-row Python otherwise dominates the model stage under the
+        async engine (GIL contention with the other stage threads).
+        """
+        try:
+            feats = np.stack([requests[idxs[j]].features for j in fresh])
+            if feats.dtype == np.float32 and feats.ndim == 2 \
+                    and feats.shape[1] >= dim:
+                return feats[:, :dim]
+        except ValueError:
+            pass  # ragged rows: fall through to per-row enrichment
+        return np.stack([
+            self.features.enrich(requests[idxs[j]].intent,
+                                 requests[idxs[j]].features, dim)
+            for j in fresh
+        ])
+
+    def apply_transforms(self, raws: np.ndarray, pred_names: list[str],
+                         plane: _ControlPlane | None = None
+                         ) -> tuple[np.ndarray, TransformBank, np.ndarray]:
+        """Stage 2: the whole window through ONE banked T^C/A/T^Q kernel call.
+
+        The bank is resolved from the stage-time ``plane`` snapshot — a
+        calibration publish landing between stage 1 and stage 2 is picked up
+        here wholesale (raw expert scores are generation-independent), and
+        every row of the window scores under exactly one bank generation.
+        Returns (scores, bank, tenant_idx); the bank's ``generation`` is the
+        window's provenance stamp.
+        """
+        plane = self._plane if plane is None else plane
+        bank_names = tuple(sorted(set(pred_names)))  # canonical cache key
+        bank = self._bank_for(bank_names, plane)
+        row_of = {n: r for r, n in enumerate(bank_names)}
         tenant_idx = np.asarray([row_of[n] for n in pred_names], np.int32)
+        b = len(tenant_idx)
+        pad = _shape_bucket(b) - b
+        if pad:  # bucketed kernel shape, same reasoning as run_models
+            kraws = np.concatenate(
+                [raws, np.zeros((pad,) + raws.shape[1:], raws.dtype)])
+            kidx = np.concatenate([tenant_idx, np.zeros(pad, np.int32)])
+        else:
+            kraws, kidx = raws, tenant_idx
         if self.config.fused_kernel:
             scores = ops.score_pipeline_banked(
-                jnp.asarray(raws, jnp.float32), jnp.asarray(tenant_idx),
+                jnp.asarray(kraws, jnp.float32), jnp.asarray(kidx),
                 bank.betas, bank.weights,
                 bank.src_quantiles, bank.ref_quantiles)
         else:
-            scores = bank(jnp.asarray(raws, jnp.float32),
-                          jnp.asarray(tenant_idx))
-        self.metrics["kernel_dispatches"] += 1
-        return np.asarray(scores), np.asarray(raws), bank, tenant_idx
+            scores = bank(jnp.asarray(kraws, jnp.float32),
+                          jnp.asarray(kidx))
+        self.bump_metric("kernel_dispatches")
+        return np.asarray(scores)[:b], bank, tenant_idx
 
-    def _track_quantiles(self, requests, idxs, pred_names, raws,
-                         bank: TransformBank, tenant_idx) -> None:
+    def track(self, requests: list[ScoringRequest], idxs: list[int],
+              pred_names: list[str], raws: np.ndarray, bank: TransformBank,
+              tenant_idx: np.ndarray) -> None:
+        """Stage 3: batched per-(tenant, predictor) reservoir updates.
+
+        Tracks the T^Q INPUT distribution — the posterior-corrected weighted
+        aggregate through the window's OWN bank snapshot; fitting a refreshed
+        T^Q on raw means would mismatch the pipeline (the bug class the
+        paper's Sec.-3.1 update avoids).  Order-insensitive, so the async
+        engine may run it a stage behind the response path.
+        """
         if not self.config.track_quantiles:
             return
-        # Track the T^Q INPUT distribution: the posterior-corrected weighted
-        # aggregate — fitting a refreshed T^Q on raw means would mismatch
-        # the pipeline (the bug class the paper's Sec.-3.1 update avoids).
         agg = np.asarray(bank.pre_quantile(
             jnp.asarray(raws, jnp.float32), jnp.asarray(tenant_idx)))
         by_stream: dict[tuple[str, str], list[int]] = {}
@@ -366,36 +525,72 @@ class MuseServer:
                 self._estimators[key] = est
             est.update(agg[rows])
 
+    # -------------------------------------------------------- sync data path
+    def score_batch(self, requests: list[ScoringRequest]) -> list[ScoringResponse]:
+        """Scores a mixed-tenant batch: requests are grouped by model group
+        (shared expert-model set); each group costs one model executable
+        call plus ONE tenant-indexed banked kernel dispatch, whatever mix of
+        tenants and predictors the group contains.
+
+        This is the synchronous driver: it runs the three dispatch stages
+        back-to-back per group against ONE plane snapshot for the whole
+        batch (live + shadows), so even a refresh landing mid-flight from
+        another thread cannot mix generations.  ``serving/engine.py``
+        pipelines the same stages across windows instead.
+        """
+        plane = self._plane  # dispatch-time snapshot
+        resolutions = [self.routing.resolve(r.intent) for r in requests]
+        by_group: dict[tuple[str, ...], list[int]] = {}
+        for i, res in enumerate(resolutions):
+            key = plane.predictors[res.live].model_names
+            by_group.setdefault(key, []).append(i)
+
+        # per-call raw-score cache: (model group, request index) -> (K,) row.
+        # Live and shadow dispatches sharing a model group reuse expert
+        # outputs instead of re-running the models (shadow dedup).
+        raw_cache: dict[tuple[tuple[str, ...], int], np.ndarray] = {}
+        responses: list[ScoringResponse | None] = [None] * len(requests)
+        for idxs in by_group.values():
+            t0 = time.perf_counter()  # per-dispatch latency, not cumulative
+            pred_names = [resolutions[i].live for i in idxs]
+            raws = self.run_models(requests, idxs, pred_names, raw_cache,
+                                   plane)
+            scores, bank, tenant_idx = self.apply_transforms(
+                raws, pred_names, plane)
+            latency_ms = (time.perf_counter() - t0) * 1000.0
+            built = self.build_responses(requests, idxs, pred_names, scores,
+                                         raws, bank, self.routing.version,
+                                         latency_ms)
+            for i, resp in zip(idxs, built):
+                responses[i] = resp
+            self.track(requests, idxs, pred_names, raws, bank, tenant_idx)
+
+        # shadow evaluations (never affect the response)
+        self._run_shadows(requests, resolutions, raw_cache, plane)
+        self.bump_metric("requests", len(requests))
+        return responses  # type: ignore[return-value]
+
     def _run_shadows(self, requests, resolutions,
                      raw_cache: dict | None = None,
-                     predictors: dict[str, Predictor] | None = None,
-                     banks: dict[tuple[str, ...], _BankEntry] | None = None,
-                     ) -> None:
+                     plane: _ControlPlane | None = None) -> None:
         # shadow rows are (request, shadow-predictor) pairs, grouped by the
-        # shadow's model group and dispatched through the same banked path.
+        # shadow's model group and dispatched through the same staged path.
         # ``raw_cache`` carries the live dispatches' expert outputs: a shadow
         # sharing its request's live model group reuses them (no re-run).
-        predictors = self.predictors if predictors is None else predictors
+        plane = self._plane if plane is None else plane
         by_group: dict[tuple[str, ...], tuple[list[int], list[str]]] = {}
         for i, res in enumerate(resolutions):
             for s in res.shadows:
-                key = predictors[s].model_names
+                key = plane.predictors[s].model_names
                 idxs, names = by_group.setdefault(key, ([], []))
                 idxs.append(i)
                 names.append(s)
         for idxs, shadow_names in by_group.values():
-            scores, raws, _, _ = self._dispatch_banked(
-                requests, idxs, shadow_names, raw_cache, predictors, banks)
-            for j, i in enumerate(idxs):
-                self.sink.write(ShadowRecord(
-                    request_id=requests[i].request_id,
-                    tenant=requests[i].intent.tenant,
-                    predictor=shadow_names[j],
-                    score=float(scores[j]),
-                    raw_scores=tuple(float(x) for x in np.atleast_1d(raws[j])),
-                    routing_version=self.routing.version,
-                ))
-                self.metrics["shadow_evals"] += 1
+            raws = self.run_models(requests, idxs, shadow_names, raw_cache,
+                                   plane)
+            scores, _, _ = self.apply_transforms(raws, shadow_names, plane)
+            self.write_shadow_records(requests, idxs, shadow_names, scores,
+                                      raws, self.routing.version)
 
     # --------------------------------------------------------------- refresh
     def estimator_streams(self) -> dict[tuple[str, str],
@@ -403,8 +598,10 @@ class MuseServer:
         """Live (tenant, predictor) -> estimator map (control-plane view).
 
         Streams whose predictor has since been decommissioned are excluded —
-        the calibration controller must never refit a dead pipeline."""
-        return {k: est for k, est in self._estimators.items()
+        the calibration controller must never refit a dead pipeline.  The
+        scan copies the dict first: the track stage may insert a stream for
+        a newly seen (tenant, predictor) from another thread mid-scan."""
+        return {k: est for k, est in dict(self._estimators).items()
                 if k[1] in self.predictors}
 
     def calibration_ready(self, tenant: str, predictor: str) -> bool:

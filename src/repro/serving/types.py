@@ -28,6 +28,9 @@ class ScoringResponse:
     routing_version: str
     latency_ms: float
     raw_scores: tuple[float, ...] = ()        # per-expert raw scores (debug)
+    # generation of the TransformBank this response was scored under — the
+    # calibration-provenance stamp (every row of a window shares exactly one)
+    bank_generation: int = -1
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
 # Test runner: CPU-hosted multi-device JAX + src-layout imports.
 #
-#   ./test.sh              fast suite (excludes -m slow scenario campaigns)
-#   ./test.sh --slow       only the slow scenario tests
-#   ./test.sh --all        everything (what CI tier-1 runs)
+#   ./test.sh                fast suite (excludes -m slow campaigns AND the
+#                            -m concurrency threaded tests, so the -x pass
+#                            stays single-threaded and deterministic)
+#   ./test.sh --slow         only the slow scenario tests
+#   ./test.sh --concurrency  only the threaded reader/writer + engine tests
+#   ./test.sh --all          everything (what CI tier-1 runs)
 #   ./test.sh [pytest args...]   extra args forwarded to pytest
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -15,7 +18,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 case "${1:-}" in
-  --slow) shift; exec python -m pytest -q -m slow "$@" ;;
-  --all)  shift; exec python -m pytest -q "$@" ;;
-  *)      exec python -m pytest -q -m "not slow" "$@" ;;
+  --slow)        shift; exec python -m pytest -q -m slow "$@" ;;
+  --concurrency) shift; exec python -m pytest -q -m concurrency "$@" ;;
+  --all)         shift; exec python -m pytest -q "$@" ;;
+  *)             exec python -m pytest -q -m "not slow and not concurrency" "$@" ;;
 esac
