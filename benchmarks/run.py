@@ -103,6 +103,15 @@ def main() -> None:
          f"quantile_update_speedup={r['quantile_update_speedup']:.1f}x;"
          f"max_abs_err={r['max_abs_err_vs_oracle']:.2e}")
 
+    # ---- tenant-sharded banks: per-shard residency + dispatch throughput ----
+    from benchmarks import bench_sharded_bank
+    r = bench_sharded_bank.run(quick=quick)
+    _csv("sharded_bank", r["us_per_batch_smax"],
+         f"tenants={r['max_tenants']};shards={r['max_shards']};"
+         f"residency_ratio={r['residency_ratio_at_smax']:.3f};"
+         f"throughput_ratio_s1={r['throughput_ratio_s1']:.2f}x;"
+         f"bitwise_parity={r['all_bitwise_parity']}")
+
     # ---- async banked dispatch engine vs synchronous ServerBatcher ----------
     from benchmarks import bench_async_engine
     r = bench_async_engine.run(quick=quick)
@@ -118,8 +127,12 @@ def main() -> None:
     from benchmarks import bench_kernels
     r = bench_kernels.run(quick=quick)
     for name, row in r.items():
-        _csv(f"kernel_{name}", row["us_per_call"],
-             f"allclose={row.get('kernel_allclose', True)}")
+        derived = f"allclose={row.get('kernel_allclose', True)}"
+        if "skip_rate_sorted" in row:
+            derived += (f";skip_rate_sorted={row['skip_rate_sorted']:.2f}"
+                        f";skip_rate_adversarial="
+                        f"{row['skip_rate_adversarial']:.2f}")
+        _csv(f"kernel_{name}", row["us_per_call"], derived)
 
     print(f"\n# total bench time: {time.perf_counter() - t_all:.1f}s",
           file=sys.stderr)

@@ -13,6 +13,8 @@ from repro.core.transforms import (
     Aggregation,
     PosteriorCorrection,
     QuantileMap,
+    ShardedTransformBank,
+    TENANT_AXIS,
     TransformBank,
     banked_score_pipeline,
     posterior_correction,
@@ -24,7 +26,8 @@ from repro.core.routing import Condition, Intent, Resolution, RoutingTable, Scor
 from repro.core.registry import ModelPool
 
 __all__ = [
-    "Aggregation", "PosteriorCorrection", "QuantileMap", "TransformBank",
+    "Aggregation", "PosteriorCorrection", "QuantileMap",
+    "ShardedTransformBank", "TENANT_AXIS", "TransformBank",
     "banked_score_pipeline", "posterior_correction", "quantile_map",
     "score_pipeline",
     "Predictor", "PredictorSpec", "TransformPipeline", "deploy_predictor",

@@ -120,6 +120,50 @@ class StreamingQuantileEstimator:
         """Has this stream accumulated enough events for a trustworthy T^Q?"""
         return self._seen >= required_sample_size(alert_rate, rel_error, z)
 
+    # ------------------------------------------------------- persistence
+    def checkpoint_arrays(self) -> dict[str, np.ndarray]:
+        """Array state for a checkpoint leaf dict (reservoir + recent ring).
+
+        Full-capacity buffers are stored (not just the filled prefix) so the
+        restore target has a static shape; ``checkpoint_meta`` records how
+        much of each is live."""
+        return {"buf": self._buf.copy(), "recent": self._recent.copy()}
+
+    def checkpoint_meta(self) -> dict:
+        """JSON-safe scalar state.  The RNG bit-generator state is reprd
+        (its 128-bit PCG64 ints overflow orjson's 64-bit limit) so a
+        restored estimator continues the SAME reservoir-acceptance sequence
+        it would have run unsaved."""
+        return {
+            "capacity": int(self.capacity),
+            "seed": int(self.seed),
+            "recent_capacity": int(self.recent_capacity),
+            "seen": int(self._seen),
+            "recent_pos": int(self._recent_pos),
+            "rng_state": repr(self._rng.bit_generator.state),
+        }
+
+    @staticmethod
+    def from_checkpoint(arrays: dict, meta: dict) -> "StreamingQuantileEstimator":
+        """Rebuild an estimator from ``checkpoint_arrays``/``checkpoint_meta``.
+
+        The round-trip is exact: reservoir samples, recent ring (+ pointer),
+        observed count (so the Eq.-5 gate still passes), and RNG state all
+        restore bit-for-bit — a surged replica starts warm."""
+        import ast
+
+        est = StreamingQuantileEstimator(
+            capacity=int(meta["capacity"]), seed=int(meta["seed"]),
+            recent_capacity=int(meta["recent_capacity"]))
+        est._buf[:] = np.asarray(arrays["buf"], np.float64)
+        est._recent[:] = np.asarray(arrays["recent"], np.float64)
+        est._seen = int(meta["seen"])
+        est._recent_pos = int(meta["recent_pos"])
+        rng_state = meta.get("rng_state")
+        if rng_state:
+            est._rng.bit_generator.state = ast.literal_eval(rng_state)
+        return est
+
 
 def batch_sample_quantiles(
     samples: Sequence[np.ndarray],

@@ -388,6 +388,201 @@ def _banked_pre_quantile(expert_scores: Array, tenant_idx: Array,
     return jnp.sum(corrected * w, axis=-1)
 
 
+# ---------------------------------------------------------------------------
+# Tenant-sharded transform bank (mesh row partition, ROADMAP "Sharded
+# transform banks")
+# ---------------------------------------------------------------------------
+
+TENANT_AXIS = "tenants"  # mesh axis name the bank rows are partitioned over
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedTransformBank:
+    """A :class:`TransformBank` row-partitioned over a mesh "tenants" axis.
+
+    The dense bank stacks EVERY (tenant, predictor) row on every replica —
+    the wall past ~10k tenants.  This container splits the rows over S
+    shards: parameter arrays carry a leading shard axis ((S, Tl, K) /
+    (S, Tl, N), ``Tl = max shard occupancy``) so ``shard_map`` placement
+    over the "tenants" axis leaves each device holding ONLY its local rows
+    (``per_shard_bytes`` ≈ dense/S).  ``shard_of``/``local_of`` are the
+    host-side global↔local tenant-id remap the serving layer buckets
+    requests with; occupancy may be uneven and shards may be empty (rows
+    beyond ``row_counts[s]`` are inert identity padding — no request ever
+    selects them).
+
+    Like the dense bank, a sharded bank is immutable and generation-stamped:
+    ``with_rows`` scatters refreshed T^Q tables ONLY into each row's owning
+    shard and returns a NEW object under one bumped generation, so a
+    calibration publish swaps every shard's sub-bank in the same single
+    control-plane assignment — per-shard generations can never diverge.
+    """
+
+    betas: Array          # (S, Tl, K)
+    weights: Array        # (S, Tl, K)
+    src_quantiles: Array  # (S, Tl, N)
+    ref_quantiles: Array  # (S, Tl, N)
+    shard_of: np.ndarray  # (T,) owning shard per global bank row
+    local_of: np.ndarray  # (T,) local row within the owning shard
+    row_counts: np.ndarray  # (S,) occupied rows per shard
+    generation: int = 0
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def num_shards(self) -> int:
+        return int(self.betas.shape[0])
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.shard_of.shape[0])
+
+    @property
+    def rows_per_shard(self) -> int:
+        return int(self.betas.shape[1])
+
+    @property
+    def num_experts(self) -> int:
+        return int(self.betas.shape[-1])
+
+    @property
+    def num_quantiles(self) -> int:
+        return int(self.src_quantiles.shape[-1])
+
+    @property
+    def per_shard_bytes(self) -> int:
+        """Bank bytes RESIDENT on one shard (the 1/S residency headline)."""
+        tl, k, n = self.rows_per_shard, self.num_experts, self.num_quantiles
+        return tl * (2 * k + 2 * n) * 4
+
+    def locate(self, tenant_idx) -> tuple[np.ndarray, np.ndarray]:
+        """Global row ids -> (owning shard, local row) — the dispatch remap."""
+        tid = np.asarray(tenant_idx, np.int64).reshape(-1)
+        return self.shard_of[tid], self.local_of[tid]
+
+    # --------------------------------------------------------- conversions
+    @staticmethod
+    def from_dense(bank: TransformBank, num_shards: int,
+                   shard_of: np.ndarray | None = None
+                   ) -> "ShardedTransformBank":
+        """Partition a dense bank's rows over ``num_shards`` shards.
+
+        ``shard_of`` (optional, (T,)) assigns each global row an owning
+        shard — any assignment is legal, including empty shards.  Default is
+        round-robin (``t % S``), which keeps occupancy within one row of
+        even.  Local ids are assigned in global-row order within each shard;
+        shards are padded to the max occupancy with identity rows
+        (beta=1, weight=1, identity quantile table) that no request selects.
+        """
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        t = bank.num_rows
+        assign = (np.arange(t) % num_shards if shard_of is None
+                  else np.asarray(shard_of, np.int64).reshape(-1))
+        if assign.shape[0] != t:
+            raise ValueError(
+                f"shard_of has {assign.shape[0]} entries for {t} bank rows")
+        if assign.size and (assign.min() < 0 or assign.max() >= num_shards):
+            raise ValueError("shard_of entries outside [0, num_shards)")
+        counts = np.bincount(assign, minlength=num_shards).astype(np.int64)
+        # local slot = position within the shard in global-row order,
+        # vectorized (publishes call this under the control-plane lock, so
+        # an O(T) Python loop would serialize the fleet at large T)
+        order = np.argsort(assign, kind="stable")
+        starts = np.cumsum(counts) - counts
+        local = np.empty(t, np.int64)
+        local[order] = np.arange(t) - np.repeat(starts, counts)
+        tl = max(int(counts.max()) if counts.size else 0, 1)
+        k, n = bank.num_experts, bank.num_quantiles
+
+        betas = np.ones((num_shards, tl, k), np.float32)
+        weights = np.ones((num_shards, tl, k), np.float32)
+        ident = np.linspace(0.0, 1.0, n, dtype=np.float32)
+        src = np.broadcast_to(ident, (num_shards, tl, n)).copy()
+        ref = src.copy()
+        b_np = np.asarray(bank.betas)
+        w_np = np.asarray(bank.weights)
+        qs_np = np.asarray(bank.src_quantiles)
+        qr_np = np.asarray(bank.ref_quantiles)
+        betas[assign, local] = b_np
+        weights[assign, local] = w_np
+        src[assign, local] = qs_np
+        ref[assign, local] = qr_np
+        return ShardedTransformBank(
+            betas=jnp.asarray(betas), weights=jnp.asarray(weights),
+            src_quantiles=jnp.asarray(src), ref_quantiles=jnp.asarray(ref),
+            shard_of=assign, local_of=local, row_counts=counts,
+            generation=bank.generation)
+
+    def shard_bank(self, shard: int) -> TransformBank:
+        """The dense sub-bank one shard serves (its occupied local rows)."""
+        c = int(self.row_counts[shard])
+        c = max(c, 1)  # empty shard: expose one (inert) identity row
+        return TransformBank(
+            betas=self.betas[shard, :c], weights=self.weights[shard, :c],
+            src_quantiles=self.src_quantiles[shard, :c],
+            ref_quantiles=self.ref_quantiles[shard, :c],
+            generation=self.generation)
+
+    def to_dense(self) -> TransformBank:
+        """Reassemble the global dense bank (parity/inspection path)."""
+        sh = jnp.asarray(self.shard_of)
+        lo = jnp.asarray(self.local_of)
+        return TransformBank(
+            betas=self.betas[sh, lo], weights=self.weights[sh, lo],
+            src_quantiles=self.src_quantiles[sh, lo],
+            ref_quantiles=self.ref_quantiles[sh, lo],
+            generation=self.generation)
+
+    # ------------------------------------------------------------- updates
+    def with_rows(
+        self,
+        rows: Mapping[int, tuple[Array, Array]] | Mapping[int, "QuantileMap"],
+        *,
+        generation: int | None = None,
+    ) -> "ShardedTransformBank":
+        """Functional T^Q update addressed by GLOBAL row id.
+
+        Each replacement table is scattered only into its row's owning
+        shard ((shard, local) indices, one ``.at[].set`` per array); every
+        other shard's rows are carried over untouched.  Semantics otherwise
+        match :meth:`TransformBank.with_rows` (edge-padding of narrow
+        tables, generation defaulting to current + 1).
+        """
+        if not rows:
+            return self if generation is None else dataclasses.replace(
+                self, generation=generation)
+        n = self.num_quantiles
+        s_idx, l_idx, srcs, refs = [], [], [], []
+        for row, value in sorted(rows.items()):
+            if not 0 <= row < self.num_rows:
+                raise IndexError(f"row {row} outside bank of {self.num_rows}")
+            src, ref = (value.src_quantiles, value.ref_quantiles) \
+                if isinstance(value, QuantileMap) else value
+            src = jnp.asarray(src, jnp.float32)
+            ref = jnp.asarray(ref, jnp.float32)
+            pad = n - src.shape[-1]
+            if pad < 0:
+                raise ValueError(
+                    f"row {row}: {src.shape[-1]} knots > bank's {n}")
+            if pad:
+                src = jnp.pad(src, (0, pad), mode="edge")
+                ref = jnp.pad(ref, (0, pad), mode="edge")
+            s_idx.append(int(self.shard_of[row]))
+            l_idx.append(int(self.local_of[row]))
+            srcs.append(src)
+            refs.append(ref)
+        s_idx = jnp.asarray(s_idx, jnp.int32)
+        l_idx = jnp.asarray(l_idx, jnp.int32)
+        return dataclasses.replace(
+            self,
+            src_quantiles=self.src_quantiles.at[s_idx, l_idx].set(
+                jnp.stack(srcs)),
+            ref_quantiles=self.ref_quantiles.at[s_idx, l_idx].set(
+                jnp.stack(refs)),
+            generation=self.generation + 1 if generation is None else generation,
+        )
+
+
 def banked_score_pipeline(
     expert_scores: Array,
     tenant_idx: Array,

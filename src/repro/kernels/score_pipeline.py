@@ -15,10 +15,20 @@ Two entry points:
                                     parameter set for the whole batch.
   * :func:`score_pipeline_banked` — tenant-indexed: parameters are (T, ·)
                                     banks and each row carries a
-                                    ``tenant_idx`` gathered INSIDE the kernel
-                                    (one-hot matmuls on the MXU), so a single
-                                    ``pallas_call`` scores a mixed-tenant
-                                    micro-batch.
+                                    ``tenant_idx`` gathered INSIDE the kernel,
+                                    so a single ``pallas_call`` scores a
+                                    mixed-tenant micro-batch.
+
+The banked kernel distils ``tenant_idx`` into per-block scalars carried via
+``pltpu.PrefetchScalarGridSpec``: for every grid block the wrapper computes
+(block_tenant, block_uniform) — available in SMEM before the block body runs
+(and to the block index maps).  An all-one-tenant block skips the dense
+(BLOCK, T) one-hot gather matmuls entirely and loads its single parameter
+row with one scalar-indexed slice; only genuinely mixed blocks pay the
+one-hot path.  Real traffic is bursty per tenant (and the sharded serving
+path buckets rows by owning shard, which sorts them by tenant), so most
+serving blocks take the fast path — :func:`banked_skip_stats` reports the
+realized skip rate for a given layout.
 """
 from __future__ import annotations
 
@@ -26,7 +36,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
@@ -107,43 +119,92 @@ def score_pipeline(expert_scores: Array, betas: Array, weights: Array,
     return out[:n].reshape(batch_shape)
 
 
-def _score_pipeline_banked_kernel(scores_ref, idx_ref, betas_ref, weights_ref,
+def _score_pipeline_banked_kernel(btenant_ref, uniform_ref, scores_ref,
+                                  idx_ref, betas_ref, weights_ref,
                                   src_ref, ref_ref, out_ref):
+    b = pl.program_id(0)
     y = scores_ref[...].astype(jnp.float32)          # (BLOCK, K)
-    tid = idx_ref[...].astype(jnp.int32)             # (BLOCK,)
-    t = betas_ref.shape[0]
 
-    # --- gather this row's (tenant, predictor) parameters from the bank.
-    # A one-hot (BLOCK, T) matmul against each (T, ·) bank keeps the gather
-    # dense (MXU-friendly) — no data-dependent addressing inside the kernel.
-    iota_t = jax.lax.broadcasted_iota(jnp.int32, (y.shape[0], t), 1)
-    sel = (iota_t == tid[:, None]).astype(jnp.float32)          # (BLOCK, T)
-    beta = sel @ betas_ref[...].astype(jnp.float32)             # (BLOCK, K)
-    w = sel @ weights_ref[...].astype(jnp.float32)              # (BLOCK, K)
-    qs = sel @ src_ref[...].astype(jnp.float32)                 # (BLOCK, N)
-    qr = sel @ ref_ref[...].astype(jnp.float32)                 # (BLOCK, N)
+    def finish(beta, w, qs, qr):
+        """Eq. 2 tail on gathered parameters; row axes broadcast, so the
+        uniform path passes (1, ·) rows and the mixed path (BLOCK, ·) —
+        the per-row fp op sequence is IDENTICAL either way (the sharded
+        serving path relies on this for bitwise dense/sharded parity)."""
+        # --- T^C: per-row posterior correction (Eq. 3)
+        corrected = beta * y / (1.0 - (1.0 - beta) * y)
+        # --- A: per-row self-normalizing weighted average
+        w_norm = w / jnp.sum(w, axis=-1, keepdims=True)
+        agg = jnp.sum(corrected * w_norm, axis=-1)              # (BLOCK,)
+        # --- T^Q: branchless quantile map against per-row tables (Eq. 4)
+        n = qs.shape[-1]
+        ge = (agg[:, None] >= qs).astype(jnp.float32)
+        idx = jnp.clip(jnp.sum(ge, axis=-1) - 1.0, 0.0, n - 2.0)
+        iota_n = jax.lax.broadcasted_iota(jnp.float32, (agg.shape[0], n), 1)
+        onehot_i = (iota_n == idx[:, None]).astype(jnp.float32)
+        onehot_ip1 = (iota_n == (idx + 1.0)[:, None]).astype(jnp.float32)
+        q_s_i = jnp.sum(onehot_i * qs, axis=-1)
+        q_s_n = jnp.sum(onehot_ip1 * qs, axis=-1)
+        q_r_i = jnp.sum(onehot_i * qr, axis=-1)
+        q_r_n = jnp.sum(onehot_ip1 * qr, axis=-1)
+        denom = jnp.where(q_s_n - q_s_i > 0, q_s_n - q_s_i, 1.0)
+        out = q_r_i + (agg - q_s_i) * (q_r_n - q_r_i) / denom
+        out_ref[...] = jnp.clip(out, qr[:, 0], qr[:, -1]).astype(out_ref.dtype)
 
-    # --- T^C: per-row posterior correction (Eq. 3)
-    corrected = beta * y / (1.0 - (1.0 - beta) * y)
+    @pl.when(uniform_ref[b] == 1)
+    def _uniform_block():
+        # fast path: every row of this block selects the same bank row —
+        # ONE scalar-indexed (1, ·) slice per table replaces four dense
+        # (BLOCK, T) one-hot gather matmuls.  The row index comes from the
+        # prefetched SMEM scalars, available before the block body runs.
+        t0 = btenant_ref[b]
+        row = (pl.ds(t0, 1), slice(None))
+        finish(pl.load(betas_ref, row).astype(jnp.float32),
+               pl.load(weights_ref, row).astype(jnp.float32),
+               pl.load(src_ref, row).astype(jnp.float32),
+               pl.load(ref_ref, row).astype(jnp.float32))
 
-    # --- A: per-row self-normalizing weighted average
-    w_norm = w / jnp.sum(w, axis=-1, keepdims=True)
-    agg = jnp.sum(corrected * w_norm, axis=-1)                  # (BLOCK,)
+    @pl.when(uniform_ref[b] == 0)
+    def _mixed_block():
+        # general path: gather each row's (tenant, predictor) parameters
+        # with a one-hot (BLOCK, T) matmul per (T, ·) bank — dense and
+        # MXU-friendly, no data-dependent addressing.
+        tid = idx_ref[...].astype(jnp.int32)         # (BLOCK,)
+        t = betas_ref.shape[0]
+        iota_t = jax.lax.broadcasted_iota(jnp.int32, (y.shape[0], t), 1)
+        sel = (iota_t == tid[:, None]).astype(jnp.float32)      # (BLOCK, T)
+        finish(sel @ betas_ref[...].astype(jnp.float32),        # (BLOCK, K)
+               sel @ weights_ref[...].astype(jnp.float32),
+               sel @ src_ref[...].astype(jnp.float32),          # (BLOCK, N)
+               sel @ ref_ref[...].astype(jnp.float32))
 
-    # --- T^Q: branchless quantile map against per-row tables (Eq. 4)
-    n = qs.shape[-1]
-    ge = (agg[:, None] >= qs).astype(jnp.float32)
-    idx = jnp.clip(jnp.sum(ge, axis=-1) - 1.0, 0.0, n - 2.0)
-    iota_n = jax.lax.broadcasted_iota(jnp.float32, (agg.shape[0], n), 1)
-    onehot_i = (iota_n == idx[:, None]).astype(jnp.float32)
-    onehot_ip1 = (iota_n == (idx + 1.0)[:, None]).astype(jnp.float32)
-    q_s_i = jnp.sum(onehot_i * qs, axis=-1)
-    q_s_n = jnp.sum(onehot_ip1 * qs, axis=-1)
-    q_r_i = jnp.sum(onehot_i * qr, axis=-1)
-    q_r_n = jnp.sum(onehot_ip1 * qr, axis=-1)
-    denom = jnp.where(q_s_n - q_s_i > 0, q_s_n - q_s_i, 1.0)
-    out = q_r_i + (agg - q_s_i) * (q_r_n - q_r_i) / denom
-    out_ref[...] = jnp.clip(out, qr[:, 0], qr[:, -1]).astype(out_ref.dtype)
+
+def _block_summary(idx_flat: Array, block: int) -> tuple[Array, Array]:
+    """Distil a padded (G·block,) tenant vector into per-block scalars:
+    (block_tenant, block_uniform) — the scalar-prefetch operands."""
+    blocks = idx_flat.reshape(-1, block)
+    btenant = blocks[:, 0].astype(jnp.int32)
+    uniform = jnp.all(blocks == btenant[:, None], axis=1).astype(jnp.int32)
+    return btenant, uniform
+
+
+def banked_skip_stats(tenant_idx, *, block: int = DEFAULT_BLOCK) -> dict:
+    """Host-side skip-rate report for a given tenant layout.
+
+    Mirrors the wrapper's blocking exactly (power-of-two block, edge-padded
+    tail) and returns how many grid blocks take the uniform fast path —
+    the fraction of blocks that skip the one-hot gather matmuls.
+    """
+    idx = np.asarray(tenant_idx).reshape(-1)
+    n = idx.shape[0]
+    blk = _round_block(max(n, 1), block)
+    pad = (-n) % blk
+    if pad and n:
+        idx = np.concatenate([idx, np.full(pad, idx[-1], idx.dtype)])
+    blocks = idx.reshape(-1, blk)
+    uniform = int((blocks == blocks[:, :1]).all(axis=1).sum())
+    total = blocks.shape[0]
+    return {"block": blk, "blocks": total, "uniform_blocks": uniform,
+            "skip_rate": uniform / total if total else 0.0}
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -157,8 +218,15 @@ def score_pipeline_banked(expert_scores: Array, tenant_idx: Array,
     ``expert_scores``: (..., K) raw scores; ``tenant_idx``: (...) int32 row
     index into the (T, K) / (T, N) parameter banks.  Every grid step keeps
     the full banks resident in VMEM (T·(2K+2N)·4 bytes — ~130 KB for a
-    64-tenant bank with N=256) and gathers per-row parameters in-kernel, so
-    a mixed-tenant micro-batch costs one dispatch instead of T.
+    64-tenant bank with N=256; constant index maps mean they are fetched
+    once, not per block) and gathers per-row parameters in-kernel, so a
+    mixed-tenant micro-batch costs one dispatch instead of T.
+
+    ``tenant_idx`` is distilled into per-block (block_tenant, block_uniform)
+    scalars carried through ``PrefetchScalarGridSpec``: blocks whose rows
+    all share one tenant skip the one-hot gather matmuls (see module
+    docstring).  The padding tail repeats the last real tenant id so a
+    uniform final block stays on the fast path (padded rows are sliced off).
     """
     *batch_shape, k = expert_scores.shape
     flat = expert_scores.reshape(-1, k)
@@ -172,23 +240,31 @@ def score_pipeline_banked(expert_scores: Array, tenant_idx: Array,
     pad = (-n) % block
     if pad:
         flat = jnp.pad(flat, ((0, pad), (0, 0)))
-        idx_flat = jnp.pad(idx_flat, (0, pad))  # row 0 params; sliced off
+        # edge mode: padded rows reuse the last real row's params (sliced
+        # off below), keeping an otherwise-uniform tail block uniform
+        idx_flat = jnp.pad(idx_flat, (0, pad), mode="edge")
     total = flat.shape[0]
     t, nq = src_quantiles.shape
+    btenant, uniform = _block_summary(idx_flat, block)
 
-    out = pl.pallas_call(
-        _score_pipeline_banked_kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
         grid=(total // block,),
         in_specs=[
-            pl.BlockSpec((block, k), lambda i: (i, 0)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((t, k), lambda i: (0, 0)),
-            pl.BlockSpec((t, k), lambda i: (0, 0)),
-            pl.BlockSpec((t, nq), lambda i: (0, 0)),
-            pl.BlockSpec((t, nq), lambda i: (0, 0)),
+            pl.BlockSpec((block, k), lambda i, bt, uf: (i, 0)),
+            pl.BlockSpec((block,), lambda i, bt, uf: (i,)),
+            pl.BlockSpec((t, k), lambda i, bt, uf: (0, 0)),
+            pl.BlockSpec((t, k), lambda i, bt, uf: (0, 0)),
+            pl.BlockSpec((t, nq), lambda i, bt, uf: (0, 0)),
+            pl.BlockSpec((t, nq), lambda i, bt, uf: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((block,), lambda i, bt, uf: (i,)),
+    )
+    out = pl.pallas_call(
+        _score_pipeline_banked_kernel,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((total,), expert_scores.dtype),
         interpret=interpret,
-    )(flat, idx_flat, betas, weights, src_quantiles, ref_quantiles)
+    )(btenant, uniform, flat, idx_flat, betas, weights,
+      src_quantiles, ref_quantiles)
     return out[:n].reshape(batch_shape)

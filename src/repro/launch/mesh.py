@@ -29,6 +29,30 @@ def make_host_mesh() -> jax.sharding.Mesh:
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_tenant_mesh(num_shards: int) -> jax.sharding.Mesh:
+    """1-D serving mesh over the "tenants" axis (sharded transform banks).
+
+    Each of the ``num_shards`` devices holds one row-shard of every
+    :class:`~repro.core.transforms.ShardedTransformBank`; the serving layer
+    buckets requests by owning shard and launches the banked kernel per
+    shard via ``shard_map`` over this axis.  Goes through the jax_compat
+    shim so the same call works on jax 0.4.x and the newest surface.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    avail = jax.device_count()
+    if num_shards > avail:
+        raise ValueError(
+            f"tenant mesh needs {num_shards} devices, have {avail} "
+            "(CI: XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    from repro import jax_compat
+    return jax_compat.make_mesh((num_shards,), ("tenants",))
+
+
+def tenant_axis_size(mesh: jax.sharding.Mesh) -> int:
+    return mesh.shape.get("tenants", 1)
+
+
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """The batch-sharding axes for this mesh (('pod','data') or ('data',))."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

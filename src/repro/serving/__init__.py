@@ -26,6 +26,27 @@ Consistency comes from two counters:
   track executor — serialized with the estimator reservoirs it reads while
   model/transform stages keep streaming.  In-flight windows finish on their
   snapshotted generation; the next stage picks up the published one.
+
+Sharded serving topology
+------------------------
+
+``ServerConfig(tenant_shards=S)`` row-partitions every model-group
+``TransformBank`` over an S-way "tenants" mesh axis
+(:class:`~repro.core.transforms.ShardedTransformBank`): a replica shard
+holds only its tenant rows (~1/S of the dense bank), the scaling move past
+~10k tenants.  ``apply_transforms`` buckets each window's rows by owning
+shard and launches the banked kernel per shard in ONE ``shard_map`` call
+(:class:`~repro.serving.server.ShardedBankDispatcher`), gathering results
+back in request order — scores match the dense path bitwise on f32, and
+the same path rides under the async engine's stage pipeline untouched.
+
+The calibration publish protocol is shard-oblivious by construction: the
+fleet refresh fits candidates globally (pooled streams), and
+``MuseServer.publish_quantile_maps`` rebuilds the dense bank AND its
+per-shard sub-banks (scattering refreshed rows only into their owning
+shard) inside the SAME single control-plane swap.  Generations therefore
+stay fleet-monotone across shards — a window can never observe shard A at
+generation g and shard B at g+1.
 """
 from repro.serving.batching import MicroBatcher, ServerBatcher
 from repro.serving.calibration import (
@@ -36,7 +57,12 @@ from repro.serving.calibration import (
 )
 from repro.serving.engine import AsyncDispatchEngine
 from repro.serving.rollout import Replica, ReplicaSet, RollingUpdate
-from repro.serving.server import FeatureStore, MuseServer, ServerConfig
+from repro.serving.server import (
+    FeatureStore,
+    MuseServer,
+    ServerConfig,
+    ShardedBankDispatcher,
+)
 from repro.serving.shadow import ShadowSink
 from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
 
@@ -44,6 +70,6 @@ __all__ = [
     "AsyncDispatchEngine", "MicroBatcher", "ServerBatcher", "Replica",
     "ReplicaSet", "RollingUpdate", "CalibrationController", "CandidateReport",
     "RefreshPolicy", "RefreshResult", "FeatureStore", "MuseServer",
-    "ServerConfig", "ShadowSink", "ScoringRequest", "ScoringResponse",
-    "ShadowRecord",
+    "ServerConfig", "ShardedBankDispatcher", "ShadowSink", "ScoringRequest",
+    "ScoringResponse", "ShadowRecord",
 ]

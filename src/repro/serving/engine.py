@@ -88,7 +88,8 @@ class AsyncDispatchEngine:
                  poll_interval_ms: float | None = None,
                  clock: Callable[[], float] = time.monotonic,
                  batcher: MicroBatcher | None = None,
-                 adaptive_batch_cap: int | None = None) -> None:
+                 adaptive_batch_cap: int | None = None,
+                 facade_timeout_s: float = 120.0) -> None:
         """``adaptive_batch_cap``: enable dynamic window growth.  When the
         key's model stage is still busy with the previous window, a full
         ``max_batch`` window is NOT dispatched immediately — arrivals keep
@@ -97,10 +98,17 @@ class AsyncDispatchEngine:
         the adaptive batching a synchronous batcher cannot do — so a
         backlogged pipeline amortizes per-window model/kernel dispatch
         costs instead of queueing fixed-size windows.  None = fixed-size
-        windows (default)."""
+        windows (default).
+
+        ``facade_timeout_s`` bounds each future wait inside the
+        ``score_batch`` facade — a wedged stage surfaces as a loud timeout
+        instead of hanging the caller forever, and slower lanes (the
+        8-device sharded CI pass first runs uncompiled shard_map windows)
+        can widen it without patching the wait sites."""
         self.server = server
         if adaptive_batch_cap is not None and adaptive_batch_cap < max_batch:
             raise ValueError("adaptive_batch_cap must be >= max_batch")
+        self._facade_timeout_s = facade_timeout_s
         self._base_batch = max_batch
         self._adaptive = adaptive_batch_cap is not None
         self._cap = adaptive_batch_cap or max_batch
@@ -321,7 +329,7 @@ class AsyncDispatchEngine:
         """
         futs = [self.submit(r) for r in requests]
         self.flush()
-        responses = [f.result(timeout=60.0) for f in futs]
+        responses = [f.result(timeout=self._facade_timeout_s) for f in futs]
         # this call consumed its responses via futures — drop them from the
         # drain buffer, or a long-lived facade-only replica leaks memory
         ids = {r.request_id for r in responses}

@@ -27,6 +27,26 @@ torn reads, even with a concurrent publish from another thread.
 The server is the *data plane*; control-plane operations (deploying
 predictors, publishing routing tables, triggering calibration refreshes) are
 explicit methods invoked by the rollout controller — never by clients.
+
+Sharded serving topology
+------------------------
+
+With ``ServerConfig(tenant_shards=S)`` the server serves every model-group
+bank as a :class:`~repro.core.transforms.ShardedTransformBank` row-
+partitioned over an S-way "tenants" mesh axis
+(:func:`repro.launch.mesh.make_tenant_mesh`): each device holds ONLY its
+tenant rows (~1/S of the dense bank).  ``apply_transforms`` then routes
+through :class:`ShardedBankDispatcher` — rows of a window are bucketed by
+owning shard on the host, every shard runs the banked Pallas kernel on its
+LOCAL sub-bank inside one ``shard_map`` launch, and results gather back in
+request order.  The per-row compute is the same kernel as the dense path,
+so sharded and dense scores agree bitwise on f32.
+
+Calibration publishes keep their atomicity across shards: the fleet refresh
+fits candidates globally, and ``publish_quantile_maps`` rebuilds the dense
+bank AND its per-shard sub-banks (scattering only into each row's owning
+shard) inside the same single control-plane swap — one fleet-monotone
+generation, never a torn per-shard mix.
 """
 from __future__ import annotations
 
@@ -36,14 +56,23 @@ import time
 import zlib
 from typing import Any, Callable, Mapping
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
+from repro import jax_compat
 from repro.core.predictor import Predictor, PredictorSpec, deploy_predictor
 from repro.core.quantiles import StreamingQuantileEstimator, required_sample_size
 from repro.core.registry import ModelPool
 from repro.core.routing import Intent, RoutingTable
-from repro.core.transforms import QuantileMap, TransformBank
+from repro.core.transforms import (
+    QuantileMap,
+    ShardedTransformBank,
+    TENANT_AXIS,
+    TransformBank,
+    banked_score_pipeline,
+)
 from repro.kernels import ops
 from repro.serving.shadow import ShadowSink
 from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
@@ -88,6 +117,10 @@ class ServerConfig:
     # fused tenant-indexed Pallas dispatch; False falls back to the pure-jnp
     # banked oracle (same semantics, no pallas_call)
     fused_kernel: bool = True
+    # row-shard every model-group bank over an S-way "tenants" mesh axis
+    # (1 = dense single-replica banks, the default).  Requires >= S jax
+    # devices; see the module docstring's "Sharded serving topology".
+    tenant_shards: int = 1
 
 
 def _shape_bucket(n: int) -> int:
@@ -108,10 +141,105 @@ class _BankEntry:
     ``pipelines`` is the identity witness: a ``publish_quantile_maps`` /
     redeploy replaces pipeline objects, so a stale entry fails the identity
     check and is rebuilt.  The bank itself carries the generation it was
-    published under (see :class:`~repro.core.transforms.TransformBank`)."""
+    published under (see :class:`~repro.core.transforms.TransformBank`).
+    ``sharded`` is the row-partitioned view served when
+    ``ServerConfig.tenant_shards > 1`` — always built/updated alongside the
+    dense bank in the SAME control-plane swap, so their generations agree."""
 
     pipelines: tuple[Any, ...]
     bank: TransformBank
+    sharded: ShardedTransformBank | None = None
+
+
+class ShardedBankDispatcher:
+    """shard_map-driven banked dispatch over a tenant-sharded bank.
+
+    The data-plane half of the sharded topology: a window's rows are
+    bucketed by owning shard on the host (the bank's global→local remap),
+    packed into one (S, Bs, K) batch padded per shard, and every shard runs
+    the banked kernel against ONLY its local (Tl, ·) sub-bank inside a
+    single ``shard_map`` launch over the "tenants" axis.  Results gather
+    back into request order on the host.  Shard buckets pad their tenant
+    vector edge-wise so a single-tenant bucket keeps the kernel's uniform-
+    block fast path.
+
+    Per-row compute is the identical kernel the dense path runs, and rows
+    are computed independently of batch/bank shape — sharded scores match
+    the dense path BITWISE on f32 (asserted by tests/test_sharded_bank.py).
+    """
+
+    def __init__(self, mesh: Any, *, fused: bool = True) -> None:
+        self.mesh = mesh
+        self.fused = fused
+        self._launch_fn: Any = None
+
+    def _launch(self) -> Any:
+        if self._launch_fn is None:
+            fused = self.fused
+
+            def per_shard(sc, ti, b, w, qs, qr):
+                impl = ops.score_pipeline_banked if fused \
+                    else banked_score_pipeline
+                return impl(sc[0], ti[0], b[0], w[0], qs[0], qr[0])[None]
+
+            spec = PartitionSpec(TENANT_AXIS)
+            self._launch_fn = jax.jit(jax_compat.shard_map(
+                per_shard, mesh=self.mesh, in_specs=(spec,) * 6,
+                out_specs=spec, check_vma=False))
+        return self._launch_fn
+
+    def _run(self, packed: np.ndarray, pidx: np.ndarray,
+             sbank: ShardedTransformBank) -> np.ndarray:
+        """One shard_map launch over the packed (S, Bs, ·) window."""
+        with self.mesh:
+            return np.asarray(self._launch()(
+                jnp.asarray(packed), jnp.asarray(pidx), sbank.betas,
+                sbank.weights, sbank.src_quantiles, sbank.ref_quantiles))
+
+    @staticmethod
+    def _pack_bucket(packed, pidx, shard, rows_raws, rows_idx, bs):
+        """Place one shard's rows, edge-padding the tenant vector so a
+        single-tenant bucket keeps the kernel's uniform-block fast path."""
+        n = len(rows_idx)
+        packed[shard, :n] = rows_raws
+        pidx[shard, :n] = rows_idx
+        if n and n < bs:
+            pidx[shard, n:] = pidx[shard, n - 1]
+
+    def __call__(self, raws: np.ndarray, tenant_idx: np.ndarray,
+                 sbank: ShardedTransformBank) -> np.ndarray:
+        raws = np.asarray(raws, np.float32)
+        shard_ids, local_ids = sbank.locate(tenant_idx)
+        s = sbank.num_shards
+        if s == 1:
+            # single-shard degenerate case: skip the bucketing entirely
+            # (no argsort, no fancy-index gather) so S=1 costs the same as
+            # the dense path — the bench's no-regression bar
+            b = len(local_ids)
+            bs = _shape_bucket(b) if b else 1
+            packed = np.zeros((1, bs, raws.shape[-1]), np.float32)
+            pidx = np.zeros((1, bs), np.int32)
+            self._pack_bucket(packed, pidx, 0, raws, local_ids, bs)
+            return self._run(packed, pidx, sbank)[0, :b]
+        counts = np.bincount(shard_ids, minlength=s)
+        bs = _shape_bucket(int(counts.max())) if counts.max() else 1
+        order = np.argsort(shard_ids, kind="stable")
+        packed = np.zeros((s, bs, raws.shape[-1]), np.float32)
+        pidx = np.zeros((s, bs), np.int32)
+        buckets: list[np.ndarray] = []
+        start = 0
+        for shard in range(s):
+            rows = order[start:start + counts[shard]]
+            start += counts[shard]
+            buckets.append(rows)
+            if len(rows):
+                self._pack_bucket(packed, pidx, shard, raws[rows],
+                                  local_ids[rows], bs)
+        out = self._run(packed, pidx, sbank)
+        result = np.empty(len(shard_ids), np.float32)
+        for shard, rows in enumerate(buckets):
+            result[rows] = out[shard, :len(rows)]
+        return result
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,15 +271,28 @@ class MuseServer:
         self.config = config or ServerConfig()
         # per (tenant, predictor) streaming estimators for calibration refresh
         self._estimators: dict[tuple[str, str], StreamingQuantileEstimator] = {}
+        # estimator MUTATION (track stage) vs whole-state SNAPSHOT
+        # (save_estimators) must not interleave: a checkpoint written while
+        # an update is mid-flight would pair arrays with meta (seen counts,
+        # ring pointer, RNG state) from different moments — a torn restore
+        self._estimator_lock = threading.Lock()
         # THE served control-plane state: swapped wholesale on every deploy /
         # decommission / calibration publish (never mutated across a publish).
         # A dispatch stage snapshots it once, so an in-flight window finishes
         # on the old generation and the next stage sees the new one — no
         # torn reads.
         self._plane = _ControlPlane(predictors={}, banks={}, generation=0)
+        # sharded topology: one mesh + dispatcher per server when configured
+        self._sharded_dispatch: ShardedBankDispatcher | None = None
+        if self.config.tenant_shards > 1:
+            from repro.launch.mesh import make_tenant_mesh
+            self._sharded_dispatch = ShardedBankDispatcher(
+                make_tenant_mesh(self.config.tenant_shards),
+                fused=self.config.fused_kernel)
         self.metrics: dict[str, float] = {
             "requests": 0, "shadow_evals": 0, "kernel_dispatches": 0,
-            "model_group_calls": 0, "model_calls": 0, "bank_generation": 0}
+            "model_group_calls": 0, "model_calls": 0, "bank_generation": 0,
+            "shard_dispatches": 0}
         # dict `+=` is load/add/store — racy once the engine runs stages on
         # several threads (e.g. two model-group lanes); serialize the bumps
         self._metrics_lock = threading.Lock()
@@ -291,17 +432,26 @@ class MuseServer:
             entry_fresh = len(entry.pipelines) == len(key) and all(
                 ep is plane.predictors[n].pipeline
                 for ep, n in zip(entry.pipelines, key))
-            bank = None
+            bank = sharded = None
             if entry_fresh:
                 try:
                     bank = entry.bank.with_rows(touched, generation=gen)
+                    # the sharded sub-banks take the SAME refreshed rows,
+                    # scattered into their owning shards, under the SAME
+                    # generation — published in the one plane swap below
+                    if entry.sharded is not None:
+                        sharded = entry.sharded.with_rows(
+                            touched, generation=gen)
                 except ValueError:
-                    pass  # a refreshed table wider than the bank
+                    bank = sharded = None  # a table wider than the bank
             if bank is None:
                 bank = TransformBank.from_params(
                     [(p.betas, p.weights, p.src_quantiles, p.ref_quantiles)
                      for p in pipelines], generation=gen)
-            new_banks[key] = _BankEntry(pipelines, bank)
+            if sharded is None and self._sharded_dispatch is not None:
+                sharded = ShardedTransformBank.from_dense(
+                    bank, self.config.tenant_shards)
+            new_banks[key] = _BankEntry(pipelines, bank, sharded)
 
         # the publish point: ONE whole-plane swap, never in-place edits
         self._plane = _ControlPlane(new_predictors, new_banks, gen)
@@ -369,25 +519,32 @@ class MuseServer:
             self.bump_metric("shadow_evals")
 
     def _bank_for(self, names: tuple[str, ...],
-                  plane: _ControlPlane | None = None) -> TransformBank:
+                  plane: _ControlPlane | None = None) -> _BankEntry:
         """Build (or fetch) the stacked transform bank for these predictors.
 
         Cache entries pin the source pipelines; a ``publish_quantile_maps`` /
         redeploy replaces the pipeline object, failing the identity check
         and rebuilding the bank — banks never serve stale parameters.
         ``plane`` is the stage-time snapshot; lookups go through it so a
-        concurrent publish can't produce a torn read."""
+        concurrent publish can't produce a torn read.  Under a sharded
+        topology the entry carries the row-partitioned sub-banks too (built
+        in the same insertion, same generation)."""
         plane = self._plane if plane is None else plane
         pipelines = tuple(plane.predictors[n].pipeline for n in names)
         cached = plane.banks.get(names)
         if cached is not None and len(cached.pipelines) == len(pipelines) \
                 and all(a is b for a, b in zip(cached.pipelines, pipelines)):
-            return cached.bank
+            return cached
         bank = TransformBank.from_params(
             [(p.betas, p.weights, p.src_quantiles, p.ref_quantiles)
              for p in pipelines], generation=plane.generation)
-        plane.banks[names] = _BankEntry(pipelines, bank)
-        return bank
+        sharded = None
+        if self._sharded_dispatch is not None:
+            sharded = ShardedTransformBank.from_dense(
+                bank, self.config.tenant_shards)
+        entry = _BankEntry(pipelines, bank, sharded)
+        plane.banks[names] = entry
+        return entry
 
     def score(self, request: ScoringRequest) -> ScoringResponse:
         return self.score_batch([request])[0]
@@ -474,15 +631,27 @@ class MuseServer:
         """
         plane = self._plane if plane is None else plane
         bank_names = tuple(sorted(set(pred_names)))  # canonical cache key
-        bank = self._bank_for(bank_names, plane)
+        entry = self._bank_for(bank_names, plane)
+        bank = entry.bank
         row_of = {n: r for r, n in enumerate(bank_names)}
         tenant_idx = np.asarray([row_of[n] for n in pred_names], np.int32)
         b = len(tenant_idx)
+        if entry.sharded is not None and self._sharded_dispatch is not None:
+            # sharded topology: bucket by owning shard, one shard_map launch
+            # of the banked kernel per window (the dispatcher pads per
+            # shard, so no outer shape-bucket pad is needed here)
+            scores = self._sharded_dispatch(raws, tenant_idx, entry.sharded)
+            self.bump_metric("kernel_dispatches")
+            self.bump_metric("shard_dispatches")
+            return scores, bank, tenant_idx
         pad = _shape_bucket(b) - b
         if pad:  # bucketed kernel shape, same reasoning as run_models
             kraws = np.concatenate(
                 [raws, np.zeros((pad,) + raws.shape[1:], raws.dtype)])
-            kidx = np.concatenate([tenant_idx, np.zeros(pad, np.int32)])
+            # edge-pad the tenant vector so an otherwise-uniform tail block
+            # keeps the kernel's scalar-prefetch fast path (rows sliced off)
+            kidx = np.concatenate(
+                [tenant_idx, np.full(pad, tenant_idx[-1], np.int32)])
         else:
             kraws, kidx = raws, tenant_idx
         if self.config.fused_kernel:
@@ -515,15 +684,17 @@ class MuseServer:
         for j, i in enumerate(idxs):
             key = (requests[i].intent.tenant, pred_names[j])
             by_stream.setdefault(key, []).append(j)
-        # one batched reservoir update per (tenant, predictor) stream
-        for key, rows in by_stream.items():
-            est = self._estimators.get(key)
-            if est is None:
-                est = StreamingQuantileEstimator(
-                    self.config.quantile_capacity,
-                    seed=zlib.crc32("/".join(key).encode()))
-                self._estimators[key] = est
-            est.update(agg[rows])
+        # one batched reservoir update per (tenant, predictor) stream,
+        # serialized with estimator checkpoints (see _estimator_lock)
+        with self._estimator_lock:
+            for key, rows in by_stream.items():
+                est = self._estimators.get(key)
+                if est is None:
+                    est = StreamingQuantileEstimator(
+                        self.config.quantile_capacity,
+                        seed=zlib.crc32("/".join(key).encode()))
+                    self._estimators[key] = est
+                est.update(agg[rows])
 
     # -------------------------------------------------------- sync data path
     def score_batch(self, requests: list[ScoringRequest]) -> list[ScoringResponse]:
@@ -603,6 +774,60 @@ class MuseServer:
         a newly seen (tenant, predictor) from another thread mid-scan."""
         return {k: est for k, est in dict(self._estimators).items()
                 if k[1] in self.predictors}
+
+    # ------------------------------------------------- estimator persistence
+    def save_estimators(self, directory: str, step: int = 0) -> str:
+        """Checkpoint every (tenant, predictor) estimator stream.
+
+        Uses the ``training/checkpoint.py`` layout (flat npz + json meta):
+        reservoir + recent-ring arrays land in ``arrays.npz`` under integer
+        stream keys; tenants/predictors and scalar state (seen counts, ring
+        pointers, RNG state) ride in ``meta.json``.  A surged replica
+        restores this and starts PAST the Eq.-5 gate instead of cold.
+        The whole snapshot is taken under the estimator lock, serialized
+        with the track stage's reservoir updates — every stream's arrays
+        and scalar state (seen count, ring pointer, RNG state) come from
+        ONE consistent moment, never a torn mix.  Only the npz/json write
+        happens outside the lock.
+        """
+        from repro.training.checkpoint import save_checkpoint
+
+        with self._estimator_lock:
+            snaps = [(key, est.checkpoint_arrays(), est.checkpoint_meta())
+                     for key, est in sorted(self._estimators.items())]
+        tree = {str(i): arrays for i, (_, arrays, _) in enumerate(snaps)}
+        meta = {"streams": [
+            {"tenant": t, "predictor": p, **m}
+            for (t, p), _, m in snaps]}
+        return save_checkpoint(directory, step, tree, metadata=meta)
+
+    def restore_estimators(self, directory: str, step: int | None = None
+                           ) -> int:
+        """Restore streams saved by :meth:`save_estimators`; returns the
+        number restored.  Existing streams with the same (tenant,
+        predictor) key are replaced wholesale (the checkpoint is the
+        warmer state)."""
+        import os
+
+        from repro.training.checkpoint import latest_step, load_metadata
+
+        if step is None:
+            step = latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint under {directory}")
+        meta = load_metadata(directory, step)
+        specs = meta["streams"]
+        # read the npz leaves directly as numpy: the generic
+        # restore_checkpoint path round-trips through jax arrays, which
+        # truncates float64 reservoirs to float32 without x64 enabled
+        with np.load(os.path.join(directory, str(step), "arrays.npz")) as npz:
+            arrays = dict(npz)
+        for i, m in enumerate(specs):
+            est = StreamingQuantileEstimator.from_checkpoint(
+                {"buf": arrays[f"{i}/buf"], "recent": arrays[f"{i}/recent"]},
+                m)
+            self._estimators[(m["tenant"], m["predictor"])] = est
+        return len(specs)
 
     def calibration_ready(self, tenant: str, predictor: str) -> bool:
         """Eq. 5 gate: enough live events for a trustworthy custom T^Q?"""

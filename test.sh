@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # Test runner: CPU-hosted multi-device JAX + src-layout imports.
 #
-#   ./test.sh                fast suite (excludes -m slow campaigns AND the
-#                            -m concurrency threaded tests, so the -x pass
-#                            stays single-threaded and deterministic)
+#   ./test.sh                fast suite (excludes -m slow campaigns, the
+#                            -m concurrency threaded tests AND the -m sharded
+#                            multi-device campaign, so the -x pass stays
+#                            single-threaded and deterministic)
 #   ./test.sh --slow         only the slow scenario tests
 #   ./test.sh --concurrency  only the threaded reader/writer + engine tests
+#   ./test.sh --sharded      only the multi-device sharded-bank parity campaign
 #   ./test.sh --all          everything (what CI tier-1 runs)
 #   ./test.sh [pytest args...]   extra args forwarded to pytest
 set -euo pipefail
@@ -20,6 +22,7 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 case "${1:-}" in
   --slow)        shift; exec python -m pytest -q -m slow "$@" ;;
   --concurrency) shift; exec python -m pytest -q -m concurrency "$@" ;;
+  --sharded)     shift; exec python -m pytest -q -m sharded "$@" ;;
   --all)         shift; exec python -m pytest -q "$@" ;;
-  *)             exec python -m pytest -q -m "not slow and not concurrency" "$@" ;;
+  *)             exec python -m pytest -q -m "not slow and not concurrency and not sharded" "$@" ;;
 esac

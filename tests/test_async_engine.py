@@ -171,8 +171,9 @@ class TestEngineParity:
         try:
             futs = [engine.submit(_req("t0", i)) for i in range(3)]
             # no manual poll()/flush()/drain(): the armed timer must flush
-            # the aged-out window and resolve the futures on its own
-            resps = [f.result(timeout=10.0) for f in futs]
+            # the aged-out window and resolve the futures on its own.
+            # Generous bound: the 8-device lanes pay first-trace costs here
+            resps = [f.result(timeout=60.0) for f in futs]
             assert [r.request_id for r in resps] == \
                 [f.result().request_id for f in futs]
         finally:
@@ -358,10 +359,14 @@ class TestReaderWriterEpochSafety:
         tt = threading.Thread(target=traffic)
         wt.start()
         tt.start()
-        tt.join()
+        # bounded joins: a wedged thread must FAIL the test, not hang the
+        # whole CI lane (the drain is already timeout-bounded)
+        tt.join(timeout=300.0)
+        assert not tt.is_alive(), "traffic thread wedged"
         responses = engine.drain(timeout=300.0)
         stop.set()
-        wt.join()
+        wt.join(timeout=300.0)
+        assert not wt.is_alive(), "refresh writer wedged"
         engine.close()
 
         # 1:1 delivery despite the concurrent publishes
@@ -465,8 +470,10 @@ class TestEngineSoakScenario:
             return server
 
         def make_engine(server):
-            return AsyncDispatchEngine(server, max_batch=B,
-                                       max_wait_ms=50.0).start()
+            # wide facade timeout: the soak's first windows after a replica
+            # surge pay fresh XLA traces, slower still on the 8-device lane
+            return AsyncDispatchEngine(server, max_batch=B, max_wait_ms=50.0,
+                                       facade_timeout_s=300.0).start()
 
         server_v1 = build_server("v1", old_ens, {t: qm0 for t in tenants})
         replica = Replica(0, server_v1, "v1", ready=True,

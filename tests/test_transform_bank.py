@@ -135,6 +135,115 @@ class TestBankedKernelParity:
                 bank.weights, bank.src_quantiles, bank.ref_quantiles)
 
 
+class TestScalarPrefetchBankedKernel:
+    """Regression campaign for the prefetched banked kernel: the per-block
+    (block_tenant, block_uniform) scalars ride in ``PrefetchScalarGridSpec``
+    and all-one-tenant blocks skip the one-hot gather matmuls.  Both paths
+    must match the pure-jnp ``banked_score_pipeline`` oracle, and the fast
+    path must agree with the one-hot path BITWISE (the sharded serving
+    topology re-buckets rows, which flips blocks between the two paths)."""
+
+    BLOCK = 64  # small block -> many grid blocks at test scale
+
+    def _oracle(self, bank, scores, tid):
+        return np.asarray(banked_score_pipeline(
+            jnp.asarray(scores), jnp.asarray(tid), bank.betas, bank.weights,
+            bank.src_quantiles, bank.ref_quantiles))
+
+    def _kernel(self, bank, scores, tid):
+        return np.asarray(ops.score_pipeline_banked(
+            jnp.asarray(scores), jnp.asarray(tid), bank.betas, bank.weights,
+            bank.src_quantiles, bank.ref_quantiles,
+            block=self.BLOCK))
+
+    def test_all_uniform_blocks_take_fast_path_and_match_oracle(self):
+        from repro.kernels.score_pipeline import banked_skip_stats
+        rng = np.random.default_rng(21)
+        t, k, n, b = 6, 3, 32, 6 * 64
+        bank = _random_bank(rng, t, k, n)
+        scores = rng.uniform(0, 1, (b, k)).astype(np.float32)
+        # block-aligned tenant runs: EVERY block is all-one-tenant
+        tid = np.repeat(np.arange(t, dtype=np.int32), 64)
+        stats = banked_skip_stats(tid, block=self.BLOCK)
+        assert stats == {"block": 64, "blocks": 6, "uniform_blocks": 6,
+                         "skip_rate": 1.0}
+        got = self._kernel(bank, scores, tid)
+        np.testing.assert_allclose(got, self._oracle(bank, scores, tid),
+                                   atol=TOL, rtol=TOL)
+
+    def test_adversarial_interleave_never_skips_and_matches_oracle(self):
+        from repro.kernels.score_pipeline import banked_skip_stats
+        rng = np.random.default_rng(22)
+        t, k, n, b = 5, 2, 16, 4 * 64
+        bank = _random_bank(rng, t, k, n)
+        scores = rng.uniform(0, 1, (b, k)).astype(np.float32)
+        # adversarial layout: tenants alternate row by row — every block
+        # mixes all tenants, the one-hot path runs for the whole batch
+        tid = (np.arange(b) % t).astype(np.int32)
+        stats = banked_skip_stats(tid, block=self.BLOCK)
+        assert stats["uniform_blocks"] == 0 and stats["skip_rate"] == 0.0
+        got = self._kernel(bank, scores, tid)
+        np.testing.assert_allclose(got, self._oracle(bank, scores, tid),
+                                   atol=TOL, rtol=TOL)
+
+    def test_mixed_layout_skips_exactly_the_uniform_blocks(self):
+        from repro.kernels.score_pipeline import banked_skip_stats
+        # blocks: [all-2s] [mixed] [all-0s] [mixed]
+        tid = np.concatenate([
+            np.full(64, 2), np.arange(64) % 3,
+            np.zeros(64), np.arange(64) % 2]).astype(np.int32)
+        stats = banked_skip_stats(tid, block=self.BLOCK)
+        assert stats["blocks"] == 4
+        assert stats["uniform_blocks"] == 2
+        assert stats["skip_rate"] == 0.5
+        rng = np.random.default_rng(23)
+        bank = _random_bank(rng, 3, 2, 16)
+        scores = rng.uniform(0, 1, (len(tid), 2)).astype(np.float32)
+        got = self._kernel(bank, scores, tid)
+        np.testing.assert_allclose(got, self._oracle(bank, scores, tid),
+                                   atol=TOL, rtol=TOL)
+
+    def test_fast_and_onehot_paths_agree_bitwise(self):
+        """The SAME rows scored under a uniform-block layout (fast path)
+        and embedded in an adversarial layout (one-hot path) must produce
+        bit-identical f32 scores — the dense/sharded bitwise-parity
+        invariant depends on it."""
+        rng = np.random.default_rng(24)
+        t, k, n = 4, 3, 32
+        bank = _random_bank(rng, t, k, n)
+        rows = rng.uniform(0, 1, (64, k)).astype(np.float32)
+        # (a) alone: one uniform block for tenant 1 -> fast path
+        alone = self._kernel(bank, rows, np.full(64, 1, np.int32))
+        # (b) interleaved with other tenants at 2x block size -> both
+        # blocks mixed -> one-hot path for the same 64 rows
+        other = rng.uniform(0, 1, (64, k)).astype(np.float32)
+        inter_scores = np.empty((128, k), np.float32)
+        inter_tid = np.empty(128, np.int32)
+        inter_scores[0::2], inter_scores[1::2] = rows, other
+        inter_tid[0::2], inter_tid[1::2] = 1, (np.arange(64) % t)
+        from repro.kernels.score_pipeline import banked_skip_stats
+        assert banked_skip_stats(inter_tid, block=self.BLOCK)["skip_rate"] == 0
+        mixed = self._kernel(bank, inter_scores, inter_tid)[0::2]
+        assert np.array_equal(alone.view(np.uint32), mixed.view(np.uint32))
+
+    def test_edge_padded_partial_tail_block(self):
+        """A final partial block edge-pads its tenant vector: a uniform
+        tail stays on the fast path and padded rows never leak out."""
+        from repro.kernels.score_pipeline import banked_skip_stats
+        rng = np.random.default_rng(25)
+        t, k, n, b = 3, 2, 16, 64 + 17      # 17-row tail, all tenant 2
+        bank = _random_bank(rng, t, k, n)
+        scores = rng.uniform(0, 1, (b, k)).astype(np.float32)
+        tid = np.concatenate([np.arange(64) % t,
+                              np.full(17, 2)]).astype(np.int32)
+        stats = banked_skip_stats(tid, block=self.BLOCK)
+        assert stats["blocks"] == 2 and stats["uniform_blocks"] == 1
+        got = self._kernel(bank, scores, tid)
+        assert got.shape == (b,)
+        np.testing.assert_allclose(got, self._oracle(bank, scores, tid),
+                                   atol=TOL, rtol=TOL)
+
+
 class TestFromParams:
     def test_ragged_expert_and_quantile_axes_pad_exactly(self):
         """Rows with fewer experts / knots pad with identity columns and
