@@ -1,0 +1,169 @@
+"""Fleet calibration plane: merged-fit + fenced-broadcast cost vs fleet size.
+
+The refactor's cost claim, measured: lifting calibration out of the replica
+means ONE pass does the pull + sketch merge + gate/refit/validate + fenced
+broadcast for the whole fleet.  This benchmark scales the replica count
+(2–16) at a fixed tenant population and measures where the wall time goes:
+
+  * **pull+merge** — exact estimator checkpoints from every replica reduced
+    per (tenant, predictor) via ``StreamingQuantileEstimator.merged`` (the
+    Efraimidis–Spirakis weighted reselection; grows ~linearly with fleet
+    size);
+  * **refit+validate** — the ONE vectorized fit over the merged view (flat
+    in fleet size — the point of merging: fit cost is per-stream, not
+    per-replica-stream);
+  * **publish** — the fenced per-replica broadcast
+    (``publish_quantile_maps(..., generation=...)``; linear in fleet size,
+    one bank rebuild per replica).
+
+Also records the per-pass accuracy proxy: merged-fit rank error of the
+published tables against the concatenated ground-truth stream, next to the
+documented ``merge_rank_error_bound``.  Emits
+``benchmarks/results/BENCH_fleet_refresh.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predictor import PredictorSpec
+from repro.core.quantiles import merge_rank_error_bound, required_sample_size
+from repro.core.quantiles import StreamingQuantileEstimator
+from repro.core.routing import Condition, RoutingTable, ScoringRule
+from repro.core.transforms import QuantileMap
+from repro.serving import (
+    FleetCalibrationController,
+    MuseServer,
+    RefreshPolicy,
+    Replica,
+    ReplicaSet,
+    ServerConfig,
+)
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results",
+                            "BENCH_fleet_refresh.json")
+DIM = 16
+CAP = 8192
+
+
+def _model(seed: int):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 1, DIM).astype(np.float32)
+
+    def score(x):
+        x = np.asarray(x, np.float32)
+        return jnp.asarray(1.0 / (1.0 + np.exp(-(x @ w))))
+
+    return score
+
+
+def _server(n_tenants: int) -> MuseServer:
+    factories = {"m1": lambda: _model(1), "m2": lambda: _model(2)}
+    rules = tuple(ScoringRule(Condition(tenants=(f"t{i}",)), f"p{i}")
+                  for i in range(n_tenants))
+    server = MuseServer(RoutingTable(rules, version="v1"),
+                        ServerConfig(refresh_alert_rate=0.05,
+                                     refresh_rel_error=0.5))
+    for i in range(n_tenants):
+        server.deploy(PredictorSpec(f"p{i}", ("m1", "m2"), (0.2, 0.4),
+                                    (1.0, 1.0), QuantileMap.identity(64)),
+                      factories)
+    return server
+
+
+def run(quick: bool = False) -> dict:
+    n_tenants = 4 if quick else 8
+    replica_counts = (2, 4, 8) if quick else (2, 4, 8, 16)
+    gate = required_sample_size(0.05, 0.5)
+    per_stream = 4 * gate                     # fleet-total events per stream
+    policy = RefreshPolicy(alert_rate=0.05, rel_error=0.5, n_levels=64)
+    ref = np.linspace(0.0, 1.0, 64) ** 2
+    rng = np.random.default_rng(0)
+    streams = {i: rng.normal(0.5, 0.15, per_stream).clip(0, 1)
+               for i in range(n_tenants)}
+
+    rows: list[dict] = []
+    for n_replicas in replica_counts:
+        reps = [Replica(r, _server(n_tenants), "v1", ready=True)
+                for r in range(n_replicas)]
+        per_rep = per_stream // n_replicas
+        for r, rep in enumerate(reps):
+            for i, data in streams.items():
+                est = StreamingQuantileEstimator(
+                    capacity=CAP, seed=31 * r + i, recent_capacity=256)
+                est.update(data[r * per_rep:(r + 1) * per_rep])
+                rep.server._estimators[(f"t{i}", f"p{i}")] = est
+        fleet = FleetCalibrationController(ReplicaSet(reps), ref, policy)
+
+        t0 = time.perf_counter()
+        res = fleet.refresh_fleet()
+        wall_s = time.perf_counter() - t0
+        assert len(res.refreshed) == n_tenants, \
+            [rep.reasons for rep in res.reports]
+        assert len(res.acked) == n_replicas and not res.nacked
+
+        # accuracy proxy: worst published-table rank error vs ground truth
+        worst = 0.0
+        for i, data in streams.items():
+            q = np.asarray(reps[0].server.predictors[f"p{i}"]
+                           .pipeline.src_quantiles)
+            levels = np.linspace(0.0, 1.0, len(q))
+            ranks = np.searchsorted(np.sort(data), q,
+                                    side="right") / len(data)
+            worst = max(worst, float(
+                np.max(np.abs(ranks - levels)[2:-2])))
+        rows.append({
+            "replicas": n_replicas,
+            "streams": n_tenants,
+            "events_per_stream": per_stream,
+            "wall_ms": wall_s * 1e3,
+            "merge_ms": res.merge_seconds * 1e3,
+            "refit_ms": res.refit_seconds * 1e3,
+            "validate_ms": res.validate_seconds * 1e3,
+            "publish_ms": res.publish_seconds * 1e3,
+            "publish_ms_per_replica": res.publish_seconds * 1e3 / n_replicas,
+            "fleet_generation": res.fleet_generation,
+            "worst_rank_error": worst,
+            "rank_error_bound": merge_rank_error_bound(CAP, CAP),
+        })
+
+    first, last = rows[0], rows[-1]
+    result = {
+        "tenants": n_tenants,
+        "replica_counts": list(replica_counts),
+        "estimator_capacity": CAP,
+        "rows": rows,
+        "max_replicas": last["replicas"],
+        "wall_ms_at_max": last["wall_ms"],
+        "merge_ms_at_max": last["merge_ms"],
+        "publish_ms_at_max": last["publish_ms"],
+        # fit cost must be ~flat in fleet size (it runs on the MERGED view)
+        "refit_ratio_max_vs_min": last["refit_ms"] / max(first["refit_ms"],
+                                                         1e-9),
+        "all_within_bound": all(r["worst_rank_error"]
+                                <= max(r["rank_error_bound"], 0.02)
+                                for r in rows),
+    }
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    r = run()
+    for row in r["rows"]:
+        print(f"replicas={row['replicas']:>2}  wall={row['wall_ms']:8.1f}ms  "
+              f"merge={row['merge_ms']:7.1f}ms  refit={row['refit_ms']:6.1f}ms  "
+              f"publish={row['publish_ms']:7.1f}ms  "
+              f"rank_err={row['worst_rank_error']:.4f} "
+              f"(bound {row['rank_error_bound']:.4f})")
+    print(f"results -> {RESULTS_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -112,6 +112,16 @@ def main() -> None:
          f"throughput_ratio_s1={r['throughput_ratio_s1']:.2f}x;"
          f"bitwise_parity={r['all_bitwise_parity']}")
 
+    # ---- fleet calibration: merged-fit + fenced broadcast vs fleet size -----
+    from benchmarks import bench_fleet_refresh
+    r = bench_fleet_refresh.run(quick=quick)
+    _csv("fleet_refresh", r["wall_ms_at_max"] * 1e3,
+         f"replicas={r['max_replicas']};streams={r['tenants']};"
+         f"merge_ms={r['merge_ms_at_max']:.1f};"
+         f"publish_ms={r['publish_ms_at_max']:.1f};"
+         f"refit_ratio_max_vs_min={r['refit_ratio_max_vs_min']:.2f};"
+         f"all_within_bound={r['all_within_bound']}")
+
     # ---- async banked dispatch engine vs synchronous ServerBatcher ----------
     from benchmarks import bench_async_engine
     r = bench_async_engine.run(quick=quick)

@@ -6,13 +6,52 @@ Two estimation paths:
     it per (tenant, predictor) pair; once ``required_sample_size`` is met the
     control plane can trigger a transformation refresh (the paper's
     "Automated Calibration Refresh" roadmap item, implemented here).
+
+Mergeable sketches (the fleet-calibration reduction)
+----------------------------------------------------
+
+:meth:`StreamingQuantileEstimator.merge` /
+:meth:`StreamingQuantileEstimator.merge_checkpoints` reduce per-replica
+estimator states into ONE estimator equivalent (up to the bound below) to an
+estimator that watched the concatenation of every replica's stream.  The
+fleet calibration plane (``serving/calibration.py``) pulls each replica's
+exact checkpoint (reservoir + recent ring, PR-5 serialization), merges per
+(tenant, predictor), and fits T^Q once on the merged view.
+
+**Merge accuracy bound.**  Each retained sample of part *i* represents
+``seen_i / retained_i`` stream elements; when the union of retained samples
+exceeds the merged capacity, a weighted subsample without replacement
+(Efraimidis–Spirakis keys) keeps the merged reservoir an approximately
+uniform sample of the concatenated stream.  Every uniform-subsampling stage
+of size *n* contributes at most ``c(δ) / sqrt(n)`` rank (level-space) error
+with probability ≥ 1 − δ, where ``c(δ) = sqrt(ln(2/δ) / 2)`` (the DKW
+inequality); stages compose additively.  :func:`merge_rank_error_bound`
+evaluates the bound and the property tests in ``tests/test_quantiles.py``
+assert merged-vs-concatenated fits against it.  Merged ``count`` is exactly
+the sum of part counts — associative and commutative — so the Eq.-5 gate
+sees the union of what every replica saw.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+import zlib
 from typing import Sequence
 
 import numpy as np
+
+
+def merge_rank_error_bound(*stage_sizes: int, delta: float = 1e-3) -> float:
+    """Worst-case rank (level-space) error of a multi-stage uniform subsample.
+
+    ``stage_sizes`` lists the size of every subsampling stage between the
+    concatenated stream and the final reservoir (per-part reservoirs, the
+    merge subsample, a comparison estimator's own reservoir, ...).  Each
+    stage of size ``n`` contributes ``sqrt(ln(2/delta) / 2) / sqrt(n)``
+    (DKW, confidence 1 − delta per stage); the stages add.
+    """
+    c = math.sqrt(math.log(2.0 / delta) / 2.0)
+    return float(sum(c / math.sqrt(n) for n in stage_sizes if n > 0))
 
 
 def required_sample_size(alert_rate: float, rel_error: float, z: float = 1.96) -> int:
@@ -58,6 +97,12 @@ class StreamingQuantileEstimator:
         self._recent = np.empty((self.recent_capacity,), dtype=np.float64)
         self._recent_pos = 0   # explicit ring pointer (bulk writes reset it)
         self._seen = 0
+        # live slot counts: equal to min(seen, capacity) for a purely
+        # streamed estimator, but a MERGED estimator may hold fewer retained
+        # samples than its count implies (parts already subsampled), so the
+        # live prefixes are tracked explicitly
+        self._filled = 0
+        self._recent_filled = 0
         self._rng = np.random.default_rng(self.seed)
 
     @property
@@ -77,14 +122,17 @@ class StreamingQuantileEstimator:
         if k >= rc:
             self._recent[:] = scores[-rc:]
             self._recent_pos = 0
+            self._recent_filled = rc
         else:
             pos = (self._recent_pos + np.arange(k)) % rc
             self._recent[pos] = scores
             self._recent_pos = int((self._recent_pos + k) % rc)
-        fill = min(self.capacity - min(self._seen, self.capacity), k)
+            self._recent_filled = min(self._recent_filled + k, rc)
+        fill = min(self.capacity - self._filled, k)
         if fill > 0:
-            start = self._seen
+            start = self._filled
             self._buf[start : start + fill] = scores[:fill]
+            self._filled += fill
         rest = scores[fill:]
         if len(rest) > 0:
             # Vectorized reservoir: each element replaces a random slot with
@@ -97,24 +145,97 @@ class StreamingQuantileEstimator:
         self._seen += k
 
     def quantiles(self, levels: np.ndarray) -> np.ndarray:
-        if self._seen == 0:
+        if self._filled == 0:
             raise ValueError("no samples observed")
-        data = self._buf[: min(self._seen, self.capacity)]
+        data = self._buf[: self._filled]
         q = np.quantile(data, np.asarray(levels))
         return np.maximum.accumulate(q)
 
     def values(self) -> np.ndarray:
         """Read-only view of the retained (reservoir) samples."""
-        view = self._buf[: min(self._seen, self.capacity)]
+        view = self._buf[: self._filled]
         view.flags.writeable = False
         return view
 
     def recent(self) -> np.ndarray:
         """Read-only view of the newest ≤``recent_capacity`` samples
         (unordered).  Empty until the first update."""
-        view = self._recent[: min(self._seen, self.recent_capacity)]
+        view = self._recent[: self._recent_filled]
         view.flags.writeable = False
         return view
+
+    # ------------------------------------------------------------ merging
+    def merge(self, *others: "StreamingQuantileEstimator"
+              ) -> "StreamingQuantileEstimator":
+        """Non-mutating reduction: a NEW estimator over the union of streams.
+
+        See the module docstring for the accuracy bound; ``count`` of the
+        result is exactly the sum of the parts' counts (associative and
+        commutative), so the Eq.-5 gate evaluates the fleet-wide union.
+        """
+        return StreamingQuantileEstimator.merged((self, *others))
+
+    @staticmethod
+    def merged(parts: "Sequence[StreamingQuantileEstimator]"
+               ) -> "StreamingQuantileEstimator":
+        """Merge MANY estimators (the fleet reduction over replicas).
+
+        Reservoir: the union of retained samples when it fits the merged
+        capacity (exact — zero merge error); otherwise an Efraimidis–
+        Spirakis weighted subsample without replacement, each part's samples
+        weighted by ``seen_i / retained_i`` (the stream mass one retained
+        sample represents).  Recent ring: the union of the parts' recent
+        windows, uniformly subsampled to the merged ring capacity.  The
+        merge seed derives from the (order-independent) multiset of part
+        seeds/counts, so merging is deterministic given the parts.
+        """
+        parts = [p for p in parts]
+        if not parts:
+            raise ValueError("nothing to merge")
+        cap = max(p.capacity for p in parts)
+        rc = max(p.recent_capacity for p in parts)
+        seed = zlib.crc32(repr(sorted(
+            (p.seed, p.count, p.capacity) for p in parts)).encode())
+        out = StreamingQuantileEstimator(capacity=cap, seed=seed,
+                                         recent_capacity=rc)
+        vals = [np.asarray(p.values(), np.float64) for p in parts]
+        seens = [p.count for p in parts]
+        retained = np.concatenate([v for v in vals if len(v)]) \
+            if any(len(v) for v in vals) else np.empty(0, np.float64)
+        if len(retained) <= cap:
+            out._buf[: len(retained)] = retained
+            out._filled = len(retained)
+        else:
+            # ES weighted subsample w/o replacement: key = log(u)/w, top-cap
+            w = np.concatenate([np.full(len(v), s / len(v), np.float64)
+                                for v, s in zip(vals, seens) if len(v)])
+            keys = np.log(out._rng.random(len(retained))) / w
+            sel = np.argpartition(-keys, cap - 1)[:cap]
+            out._buf[:cap] = retained[sel]
+            out._filled = cap
+        out._seen = int(sum(seens))
+        recents = [np.asarray(p.recent(), np.float64) for p in parts]
+        pool = np.concatenate([r for r in recents if len(r)]) \
+            if any(len(r) for r in recents) else np.empty(0, np.float64)
+        if len(pool) > rc:
+            pool = pool[out._rng.choice(len(pool), rc, replace=False)]
+        out._recent[: len(pool)] = pool
+        out._recent_filled = len(pool)
+        out._recent_pos = int(len(pool) % rc)
+        return out
+
+    @staticmethod
+    def merge_checkpoints(snapshots: Sequence[tuple[dict, dict]]
+                          ) -> "StreamingQuantileEstimator":
+        """Merge per-replica ``(checkpoint_arrays, checkpoint_meta)`` pairs.
+
+        The fleet calibration plane's wire format IS the exact PR-5
+        checkpoint serialization: each snapshot rebuilds bit-for-bit, then
+        the estimators reduce through :meth:`merged`.
+        """
+        return StreamingQuantileEstimator.merged(
+            [StreamingQuantileEstimator.from_checkpoint(a, m)
+             for a, m in snapshots])
 
     def ready(self, alert_rate: float, rel_error: float, z: float = 1.96) -> bool:
         """Has this stream accumulated enough events for a trustworthy T^Q?"""
@@ -140,6 +261,10 @@ class StreamingQuantileEstimator:
             "recent_capacity": int(self.recent_capacity),
             "seen": int(self._seen),
             "recent_pos": int(self._recent_pos),
+            # live prefixes: min(seen, capacity) for streamed estimators,
+            # but smaller after a merge (parts had already subsampled)
+            "filled": int(self._filled),
+            "recent_filled": int(self._recent_filled),
             "rng_state": repr(self._rng.bit_generator.state),
         }
 
@@ -159,6 +284,12 @@ class StreamingQuantileEstimator:
         est._recent[:] = np.asarray(arrays["recent"], np.float64)
         est._seen = int(meta["seen"])
         est._recent_pos = int(meta["recent_pos"])
+        # pre-merge checkpoints carry no live-prefix keys: default to the
+        # streamed invariant min(seen, capacity)
+        est._filled = int(meta.get(
+            "filled", min(est._seen, est.capacity)))
+        est._recent_filled = int(meta.get(
+            "recent_filled", min(est._seen, est.recent_capacity)))
         rng_state = meta.get("rng_state")
         if rng_state:
             est._rng.bit_generator.state = ast.literal_eval(rng_state)

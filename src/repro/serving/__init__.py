@@ -27,6 +27,25 @@ Consistency comes from two counters:
   model/transform stages keep streaming.  In-flight windows finish on their
   snapshotted generation; the next stage picks up the published one.
 
+Fleet calibration plane
+-----------------------
+
+A fleet of replicas behind a ``ReplicaSet`` is calibrated by ONE
+:class:`~repro.serving.calibration.FleetCalibrationController`: it pulls
+exact estimator checkpoints from every replica
+(``MuseServer.snapshot_estimator_checkpoints``), merges them per (tenant,
+predictor) with the mergeable-sketch reduction
+(``StreamingQuantileEstimator.merge_checkpoints``, rank-error bound in
+``core/quantiles.py``), runs gate/refit/validate once on the merged view,
+and broadcasts the validated maps under a single FENCED fleet generation —
+``publish_quantile_maps(..., generation=...)`` rejects anything not
+strictly newer (``StaleGenerationError``), so stragglers keep serving
+their complete old plane and late acks can never roll a replica back.
+``ReplicaSet.dispatch(stream=...)`` adds generation-fenced session
+routing on top, making ``bank_generation`` monotone per client stream
+across the whole fleet; ``ReplicaSet.fleet_generation()`` audits
+divergence.
+
 Sharded serving topology
 ------------------------
 
@@ -52,16 +71,25 @@ from repro.serving.batching import MicroBatcher, ServerBatcher
 from repro.serving.calibration import (
     CalibrationController,
     CandidateReport,
+    FleetCalibrationController,
+    FleetRefreshResult,
     RefreshPolicy,
     RefreshResult,
+    ReplicaPullFailure,
 )
 from repro.serving.engine import AsyncDispatchEngine
-from repro.serving.rollout import Replica, ReplicaSet, RollingUpdate
+from repro.serving.rollout import (
+    FleetGenerationAudit,
+    Replica,
+    ReplicaSet,
+    RollingUpdate,
+)
 from repro.serving.server import (
     FeatureStore,
     MuseServer,
     ServerConfig,
     ShardedBankDispatcher,
+    StaleGenerationError,
 )
 from repro.serving.shadow import ShadowSink
 from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
@@ -69,7 +97,9 @@ from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
 __all__ = [
     "AsyncDispatchEngine", "MicroBatcher", "ServerBatcher", "Replica",
     "ReplicaSet", "RollingUpdate", "CalibrationController", "CandidateReport",
-    "RefreshPolicy", "RefreshResult", "FeatureStore", "MuseServer",
-    "ServerConfig", "ShardedBankDispatcher", "ShadowSink", "ScoringRequest",
-    "ScoringResponse", "ShadowRecord",
+    "FleetCalibrationController", "FleetGenerationAudit", "FleetRefreshResult",
+    "RefreshPolicy", "RefreshResult", "ReplicaPullFailure", "FeatureStore",
+    "MuseServer", "ServerConfig", "ShardedBankDispatcher",
+    "StaleGenerationError", "ShadowSink", "ScoringRequest", "ScoringResponse",
+    "ShadowRecord",
 ]

@@ -34,6 +34,42 @@ pass of the update lifecycle; each step maps onto the paper:
 Wired into ``serving/rollout.py``, a model promotion triggers the refresh
 automatically — the paper's "model lead time from weeks to minutes",
 testable end-to-end (``tests/test_calibration_refresh.py``).
+
+The fleet calibration plane
+---------------------------
+
+One :class:`CalibrationController` refreshes ONE replica.  A fleet behind a
+load balancer needs more: refreshing each replica independently lets N
+replicas expose N divergent ``bank_generation``s to the same tenant
+mid-update.  :class:`FleetCalibrationController` lifts calibration out of
+the replica into a fleet-level control plane:
+
+  * **who fits** — the fleet controller PULLS an exact estimator checkpoint
+    snapshot from every replica (``MuseServer.snapshot_estimator_checkpoints``,
+    the PR-5 serialization as wire format), reduces them per (tenant,
+    predictor) with ``StreamingQuantileEstimator.merge_checkpoints`` (a
+    mergeable-sketch reduction with a documented rank-error bound, see
+    ``core/quantiles.py``), and runs the Eq.-5 gate → vectorized refit →
+    candidate validation ONCE on the merged view — the fit sees the union
+    of what every replica saw.
+  * **who publishes** — the fleet controller broadcasts the validated maps
+    to every replica under ONE fleet-stamped target generation
+    (``publish_quantile_maps(updates, generation=...)``); on engine-backed
+    replicas the publish lands at a stage boundary
+    (``AsyncDispatchEngine.schedule_control``).  Replica acks advance the
+    fleet generation; per-replica pull or publish failures become
+    structured report entries (``pull_failures`` / ``nacked``), never a
+    raise mid-refresh, and a fully failed pass leaves the fleet generation
+    unchanged.
+  * **what fences** — a replica rejects any fleet publish that is not
+    strictly newer than what it already serves
+    (:class:`~repro.serving.server.StaleGenerationError`), so a late ack
+    from a superseded pass can never roll a replica backwards; a straggler
+    that never acks keeps serving its complete OLD plane (old maps, old
+    generation — internally consistent), and the generation-fenced
+    ``ReplicaSet.dispatch`` keeps every client stream on replicas at or
+    above its observed generation, making ``bank_generation`` fleet-
+    monotone per stream, not just per replica.
 """
 from __future__ import annotations
 
@@ -45,7 +81,10 @@ from typing import Mapping
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantiles import batch_sample_quantiles
+from repro.core.quantiles import (
+    StreamingQuantileEstimator,
+    batch_sample_quantiles,
+)
 from repro.core.transforms import QuantileMap
 from repro.serving.drift import realized_alert_rate, transformed_stream_psi
 
@@ -71,10 +110,30 @@ class CandidateReport:
     tenant: str
     predictor: str
     samples: int                     # total events the stream has observed
-    status: str                      # "refreshed" | "not_ready" | "rejected"
+    # "refreshed" | "not_ready" | "rejected" | "pull_failed"
+    status: str
     reasons: tuple[str, ...] = ()
     psi: float = math.nan
     realized_alert_rate: float = math.nan
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSnapshot:
+    """Materialized view of one (tenant, predictor) stream for a fit pass.
+
+    The gate/refit/validate machinery operates on snapshots, not live
+    estimators: a single-replica pass snapshots its server's streams, the
+    fleet pass snapshots MERGED estimators — same fit code either way, and
+    a stream whose estimator fails mid-pull surfaces as a structured
+    ``pull_failed`` report instead of aborting the whole refresh.
+    """
+
+    tenant: str
+    predictor: str
+    count: int
+    values: np.ndarray
+    recent: np.ndarray
+    ready: bool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +163,10 @@ class RefreshResult:
     @property
     def not_ready(self) -> list[CandidateReport]:
         return self._with("not_ready")
+
+    @property
+    def pull_failed(self) -> list[CandidateReport]:
+        return self._with("pull_failed")
 
 
 class CalibrationController:
@@ -181,38 +244,57 @@ class CalibrationController:
             reasons.append("alert_rate_shift")
         return tuple(reasons), drift, rate
 
-    # --------------------------------------------------------------- refresh
-    def refresh_fleet(self, only: "set[tuple[str, str]] | None" = None,
-                      *, epoch: int = -1) -> RefreshResult:
-        """One full pass: scan, gate, vectorized refit, validate, publish.
+    # ------------------------------------------------------------- snapshot
+    def _snapshot(self, streams: "Mapping[tuple[str, str], object]",
+                  only: "set[tuple[str, str]] | None" = None,
+                  ) -> tuple[dict[tuple[str, str], StreamSnapshot],
+                             list[CandidateReport]]:
+        """Materialize live estimators into :class:`StreamSnapshot`s.
 
-        ``epoch`` is the engine stage-boundary counter when the pass is
-        scheduled through ``AsyncDispatchEngine.schedule_refresh`` (stamped
-        into the result; -1 for direct synchronous calls).
-
-        ``only`` restricts the pass to the given (tenant, predictor) keys —
-        the drift-triggered path (``drift.py::CalibrationRefreshController``)
-        refreshes just its alarmed streams through the same gate/validate/
-        atomic-publish machinery.  The restriction is widened to PREDICTOR
-        granularity: a published map recalibrates every tenant on that
-        predictor, so all of its live streams must join the pooled refit and
-        the validation (otherwise a single alarmed tenant could silently
-        shift its peers' alert rates — the veto invariant would be
-        bypassed).  Returns a :class:`RefreshResult`; the publish (if any
-        stream was refreshed) is a single atomic generation bump on the
-        server.
+        ``only`` is widened to PREDICTOR granularity here: a published map
+        recalibrates every tenant on that predictor, so all of its live
+        streams must join the pooled refit and the validation (otherwise a
+        single alarmed tenant could silently shift its peers' alert rates —
+        the veto invariant would be bypassed).  A stream whose estimator
+        raises mid-read (its replica/predictor vanished between scan and
+        pull) becomes a structured ``pull_failed`` report instead of
+        aborting the pass.
         """
         p = self.policy
-        streams = self.scan()
         if only is not None:
             preds = {pred for _, pred in only}
             streams = {k: v for k, v in streams.items() if k[1] in preds}
-        ready = {k: est for k, est in streams.items()
-                 if est.ready(p.alert_rate, p.rel_error, p.z)}
+        snaps: dict[tuple[str, str], StreamSnapshot] = {}
+        failures: list[CandidateReport] = []
+        for (tenant, pred), est in streams.items():
+            try:
+                recent = np.asarray(est.recent(), np.float64) \
+                    if hasattr(est, "recent") else np.empty(0, np.float64)
+                snaps[(tenant, pred)] = StreamSnapshot(
+                    tenant, pred, est.count,
+                    np.asarray(est.values(), np.float64), recent,
+                    est.ready(p.alert_rate, p.rel_error, p.z))
+            except Exception as e:  # noqa: BLE001 — stream gone mid-scan
+                failures.append(CandidateReport(
+                    tenant, pred, 0, "pull_failed",
+                    reasons=(f"pull:{type(e).__name__}",)))
+        return snaps, failures
+
+    # ------------------------------------------------------------------ plan
+    def _plan(self, snaps: dict[tuple[str, str], StreamSnapshot],
+              ) -> tuple[dict[str, QuantileMap], list[CandidateReport],
+                         float, float]:
+        """Steps 2–4 on materialized snapshots: gate, ONE vectorized refit,
+        per-stream validation.  Returns (validated updates, reports,
+        refit seconds, validate seconds) — publish is the caller's job (one
+        atomic swap for a single server; a fenced fleet broadcast for the
+        fleet plane)."""
+        p = self.policy
+        ready = {k: s for k, s in snaps.items() if s.ready}
         not_ready_reports: dict[tuple[str, str], CandidateReport] = {
-            (t, pred): CandidateReport(t, pred, est.count, "not_ready",
+            (t, pred): CandidateReport(t, pred, s.count, "not_ready",
                                        reasons=("eq5_gate",))
-            for (t, pred), est in streams.items() if (t, pred) not in ready
+            for (t, pred), s in snaps.items() if (t, pred) not in ready
         }
 
         # Step 3: one vectorized refit across the whole ready fleet.  Ready
@@ -221,12 +303,12 @@ class CalibrationController:
         # samples, and the pooled candidate must validate against EVERY
         # tenant's stream before it may ship.
         t0 = time.perf_counter()
-        by_pred: dict[str, list[tuple[str, "object"]]] = {}
-        for (tenant, pred), est in ready.items():
-            by_pred.setdefault(pred, []).append((tenant, est))
+        by_pred: dict[str, list[StreamSnapshot]] = {}
+        for (tenant, pred), s in ready.items():
+            by_pred.setdefault(pred, []).append(s)
         pred_names = sorted(by_pred)
         levels = np.linspace(0.0, 1.0, p.n_levels)
-        pooled = [np.concatenate([est.values() for _, est in by_pred[n]])
+        pooled = [np.concatenate([s.values for s in by_pred[n]])
                   for n in pred_names]
         src_tables = batch_sample_quantiles(pooled, levels)   # (R, n_levels)
         refit_s = time.perf_counter() - t0
@@ -241,31 +323,27 @@ class CalibrationController:
             src = src_tables[row]
             ship = True
             stream_reports: list[CandidateReport] = []
-            for tenant, est in by_pred[pred]:
-                samples = est.values()
-                recent = est.recent() if hasattr(est, "recent") else None
-                reasons, drift, rate = self._validate(src, ref, samples,
-                                                      recent)
+            for s in by_pred[pred]:
+                reasons, drift, rate = self._validate(
+                    src, ref, s.values, s.recent if len(s.recent) else None)
                 ok = not reasons
                 ship = ship and ok
                 stream_reports.append(CandidateReport(
-                    tenant, pred, est.count,
+                    s.tenant, pred, s.count,
                     "refreshed" if ok else "rejected", reasons, drift, rate))
             # NOT-ready peer streams of this predictor are recalibrated by
             # the publish too, yet never joined the pool — give them a
             # support-coverage vote (robust at small n, unlike PSI/rate):
             # traffic outside the candidate's support must veto the publish
-            for (t2, p2), est in streams.items():
+            for (t2, p2), s in snaps.items():
                 if p2 != pred or (t2, p2) in ready:
                     continue
                 peer_reasons: list[str] = []
-                samples2 = est.values()
-                if len(samples2) and \
-                        self._support_coverage(src, samples2) < 0.99:
+                if len(s.values) and \
+                        self._support_coverage(src, s.values) < 0.99:
                     peer_reasons.append("support_coverage")
-                recent2 = est.recent() if hasattr(est, "recent") else None
-                if recent2 is not None and len(recent2) and \
-                        self._support_coverage(src, recent2) < 0.98:
+                if len(s.recent) and \
+                        self._support_coverage(src, s.recent) < 0.98:
                     peer_reasons.append("support_coverage_recent")
                 if peer_reasons:
                     ship = False
@@ -289,16 +367,240 @@ class CalibrationController:
                     for r in stream_reports)
         reports = list(not_ready_reports.values()) + reports
         validate_s = time.perf_counter() - t0
+        return updates, reports, refit_s, validate_s
 
-        # Step 5: one atomic publish for the entire fleet.
+    # --------------------------------------------------------------- refresh
+    def refresh_fleet(self, only: "set[tuple[str, str]] | None" = None,
+                      *, epoch: int = -1) -> RefreshResult:
+        """One full pass: scan, gate, vectorized refit, validate, publish.
+
+        ``epoch`` is the engine stage-boundary counter when the pass is
+        scheduled through ``AsyncDispatchEngine.schedule_refresh`` (stamped
+        into the result; -1 for direct synchronous calls).
+
+        ``only`` restricts the pass to the given (tenant, predictor) keys —
+        the drift-triggered path (``drift.py::CalibrationRefreshController``)
+        refreshes just its alarmed streams through the same gate/validate/
+        atomic-publish machinery (widened to predictor granularity, see
+        :meth:`_snapshot`).  Returns a :class:`RefreshResult`; the publish
+        (if any stream was refreshed) is a single atomic generation bump on
+        the server.
+        """
+        snaps, failures = self._snapshot(self.scan(), only)
+        updates, reports, refit_s, validate_s = self._plan(snaps)
+
+        # Step 5: one atomic publish for the entire server.
         t0 = time.perf_counter()
         generation = self.server.publish_quantile_maps(updates) \
             if updates else self.server.bank_generation
         publish_s = time.perf_counter() - t0
 
         result = RefreshResult(
-            generation=generation, reports=tuple(reports),
+            generation=generation, reports=tuple(failures + reports),
             refit_seconds=refit_s, validate_seconds=validate_s,
             publish_seconds=publish_s, epoch=epoch)
+        self.history.append(result)
+        return result
+
+
+# --------------------------------------------------------------------------
+# Fleet-level calibration plane
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaPullFailure:
+    """One replica whose estimator snapshot could not be pulled this pass."""
+
+    replica_id: str
+    error: str
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetRefreshResult(RefreshResult):
+    """Outcome of one fleet-wide refresh pass.
+
+    Extends :class:`RefreshResult` (``generation`` is the fleet generation
+    after the pass) with the broadcast ledger: which replicas acked the
+    fenced publish, which rejected or failed it, which could not even be
+    pulled, plus the merge cost of the sketch reduction.
+    """
+
+    fleet_generation: int = -1
+    acked: tuple[str, ...] = ()
+    nacked: tuple[str, ...] = ()
+    pull_failures: tuple[ReplicaPullFailure, ...] = ()
+    merged_streams: int = 0
+    merge_seconds: float = 0.0
+
+
+class FleetCalibrationController(CalibrationController):
+    """One calibration plane for a FLEET of replicas.
+
+    Replaces N independent per-replica ``CalibrationController`` passes
+    (which let replicas expose divergent generations to the same tenant)
+    with a single pull -> merge -> fit -> fenced-broadcast pass:
+
+      1. **Pull** — exact estimator checkpoints from every replica
+         (``MuseServer.snapshot_estimator_checkpoints``).  A replica that
+         fails the pull becomes a :class:`ReplicaPullFailure` entry; the
+         pass continues on the replicas that answered.
+      2. **Merge** — per (tenant, predictor) reduction via
+         ``StreamingQuantileEstimator.merge_checkpoints`` (rank-error bound
+         documented in ``core/quantiles.py``).
+      3. **Fit** — the inherited ``_snapshot``/``_plan`` machinery (Eq.-5
+         gate, ONE vectorized refit, per-stream validation with peer veto)
+         runs once, on the merged view.
+      4. **Broadcast (fenced)** — validated maps go to every replica under
+         one target generation strictly above every generation currently
+         served anywhere in the fleet.  Each replica's update set is
+         filtered to its live predictors (an empty filtered set is a
+         generation fast-forward, still an ack).  Engine-backed replicas
+         apply the publish at a stage boundary via
+         ``AsyncDispatchEngine.schedule_control``.  Acks advance the fleet
+         generation; a replica that nacks (or never acks) keeps serving its
+         complete old plane and is fenced out by
+         ``MuseServer.publish_quantile_maps(..., generation=...)`` from
+         ever applying a superseded pass late.
+
+    ``replica_set`` is anything exposing ``.replicas`` (a
+    ``rollout.ReplicaSet``) or an iterable of objects with ``replica_id``,
+    ``server`` and optional ``engine`` attributes.
+    """
+
+    def __init__(self, replica_set: "object", ref_quantiles: np.ndarray,
+                 policy: RefreshPolicy | None = None,
+                 publish_timeout: float = 60.0) -> None:
+        super().__init__(None, ref_quantiles, policy)
+        self.replica_set = replica_set
+        self.publish_timeout = publish_timeout
+        self._fleet_generation = 0
+
+    # ----------------------------------------------------------------- fleet
+    def _iter_replicas(self) -> list["object"]:
+        reps = getattr(self.replica_set, "replicas", self.replica_set)
+        return list(reps)
+
+    def fleet_generation(self) -> int:
+        """Highest generation the fleet plane has published or observed."""
+        gen = self._fleet_generation
+        for rep in self._iter_replicas():
+            try:
+                gen = max(gen, rep.server.bank_generation)
+            except Exception:  # noqa: BLE001 — unreachable replica
+                continue
+        return gen
+
+    # ------------------------------------------------------------ pull/merge
+    def _pull_merged(self) -> tuple[
+            dict[tuple[str, str], StreamingQuantileEstimator],
+            tuple[ReplicaPullFailure, ...], float]:
+        """Steps 1–2: pull every replica's checkpoints, merge per stream."""
+        t0 = time.perf_counter()
+        parts: dict[tuple[str, str], list[tuple[dict, dict]]] = {}
+        failures: list[ReplicaPullFailure] = []
+        for rep in self._iter_replicas():
+            try:
+                snap = rep.server.snapshot_estimator_checkpoints()
+            except Exception as e:  # noqa: BLE001 — structured, not raised
+                failures.append(ReplicaPullFailure(
+                    str(getattr(rep, "replica_id", rep)),
+                    f"{type(e).__name__}: {e}"))
+                continue
+            for key, ckpt in snap.items():
+                parts.setdefault(key, []).append(ckpt)
+        merged = {key: StreamingQuantileEstimator.merge_checkpoints(ps)
+                  for key, ps in parts.items()}
+        return merged, tuple(failures), time.perf_counter() - t0
+
+    def scan(self) -> dict[tuple[str, str], "object"]:
+        """Step 1 fleet-wide: the MERGED per-stream estimators."""
+        merged, _, _ = self._pull_merged()
+        return merged
+
+    # -------------------------------------------------------------- publish
+    def _publish_to(self, rep: "object", updates: dict[str, QuantileMap],
+                    target: int) -> int:
+        """Fenced publish of ``updates`` to one replica at ``target``.
+
+        Filters to the replica's live predictors (an empty filtered set is
+        a pure generation fast-forward).  Engine-backed replicas apply the
+        swap at a stage boundary so no in-flight window straddles it.
+        """
+        live = set(rep.server.predictors)
+        filtered = {p: m for p, m in updates.items() if p in live}
+        engine = getattr(rep, "engine", None)
+        if engine is not None and hasattr(engine, "schedule_control"):
+            fut = engine.schedule_control(
+                lambda srv=rep.server: srv.publish_quantile_maps(
+                    filtered, generation=target))
+            return fut.result(timeout=self.publish_timeout)
+        return rep.server.publish_quantile_maps(filtered, generation=target)
+
+    def align(self, rep: "object") -> int:
+        """Fast-forward one (new/surged) replica to the fleet generation.
+
+        An empty fenced publish: no map content changes, but the replica's
+        banks are re-stamped to the current fleet generation so the fenced
+        ``ReplicaSet.dispatch`` can route generation-pinned streams to it
+        immediately.  No-op if the replica is already at or above it.
+        """
+        target = self.fleet_generation()
+        if rep.server.bank_generation >= target:
+            return rep.server.bank_generation
+        return self._publish_to(rep, {}, target)
+
+    # --------------------------------------------------------------- refresh
+    def refresh_fleet(self, only: "set[tuple[str, str]] | None" = None,
+                      *, epoch: int = -1) -> FleetRefreshResult:
+        """One fleet pass: pull, merge, gate, refit, validate, broadcast.
+
+        Never raises on per-replica failure: pull failures surface in
+        ``result.pull_failures``, publish failures in ``result.nacked``.
+        The fleet generation advances iff at least one replica acked the
+        fenced broadcast; a fully failed (or updateless) pass leaves it
+        unchanged.
+        """
+        merged, pull_failures, merge_s = self._pull_merged()
+        snaps, failures = self._snapshot(merged, only)
+        updates, reports, refit_s, validate_s = self._plan(snaps)
+
+        t0 = time.perf_counter()
+        acked: list[str] = []
+        nacked: list[str] = []
+        if updates:
+            failed_ids = {f.replica_id for f in pull_failures}
+            replicas = [r for r in self._iter_replicas()
+                        if str(getattr(r, "replica_id", r)) not in failed_ids]
+            # Fence strictly above everything served anywhere in the fleet:
+            # a replica that raced ahead (e.g. a local publish) cannot force
+            # a sibling to accept a non-monotone stamp.
+            target = self._fleet_generation
+            for rep in replicas:
+                target = max(target, rep.server.bank_generation)
+            target += 1
+            for rep in replicas:
+                rid = str(getattr(rep, "replica_id", rep))
+                try:
+                    self._publish_to(rep, updates, target)
+                except Exception as e:  # noqa: BLE001 — straggler/stale
+                    nacked.append(rid)
+                    reports.append(CandidateReport(
+                        f"replica:{rid}", "*", 0, "pull_failed",
+                        reasons=(f"publish:{type(e).__name__}",)))
+                else:
+                    acked.append(rid)
+            if acked:
+                self._fleet_generation = target
+        publish_s = time.perf_counter() - t0
+
+        result = FleetRefreshResult(
+            generation=self._fleet_generation,
+            reports=tuple(failures + reports),
+            refit_seconds=refit_s, validate_seconds=validate_s,
+            publish_seconds=publish_s, epoch=epoch,
+            fleet_generation=self._fleet_generation,
+            acked=tuple(acked), nacked=tuple(nacked),
+            pull_failures=pull_failures, merged_streams=len(snaps),
+            merge_seconds=merge_s)
         self.history.append(result)
         return result

@@ -140,6 +140,10 @@ class CalibrationRefreshController:
     # rejected/vetoed attempts, for operators: (tenant, predictor, reasons)
     rejections: list[tuple[str, str, tuple[str, ...]]] = dataclasses.field(
         default_factory=list)
+    # optional calibration.FleetCalibrationController: when set, tick()
+    # routes due refreshes through the fleet plane (merged sketches, one
+    # fenced broadcast) instead of a single-server CalibrationController
+    fleet: "object | None" = None
 
     def __post_init__(self) -> None:
         self._monitors: dict[tuple[str, str], DriftMonitor] = {}
@@ -191,18 +195,23 @@ class CalibrationRefreshController:
                and self.server.calibration_ready(t, p)}
         if not due:
             return []
-        # local import: calibration.py imports this module's validators
-        from repro.serving.calibration import (
-            CalibrationController,
-            RefreshPolicy,
-        )
-        cfg = self.server.config
-        ctrl = CalibrationController(
-            self.server, self.ref_quantiles,
-            RefreshPolicy(alert_rate=cfg.refresh_alert_rate,
-                          rel_error=cfg.refresh_rel_error,
-                          psi_bound=self.psi_alarm))
-        result = ctrl.refresh_fleet(only=set(due))
+        if self.fleet is not None:
+            # fleet path: same gate/validate machinery, but on merged
+            # replica sketches, published as one fenced fleet generation
+            result = self.fleet.refresh_fleet(only=set(due))
+        else:
+            # local import: calibration.py imports this module's validators
+            from repro.serving.calibration import (
+                CalibrationController,
+                RefreshPolicy,
+            )
+            cfg = self.server.config
+            ctrl = CalibrationController(
+                self.server, self.ref_quantiles,
+                RefreshPolicy(alert_rate=cfg.refresh_alert_rate,
+                              rel_error=cfg.refresh_rel_error,
+                              psi_bound=self.psi_alarm))
+            result = ctrl.refresh_fleet(only=set(due))
         refreshed_keys = {(r.tenant, r.predictor) for r in result.refreshed}
         for rep in result.rejected:
             self.rejections.append((rep.tenant, rep.predictor, rep.reasons))

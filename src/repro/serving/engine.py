@@ -339,15 +339,39 @@ class AsyncDispatchEngine:
         return responses
 
     # ---------------------------------------------------------- control ops
+    def schedule_control(self, fn: Callable[[], Any]) -> Future:
+        """Run ``fn`` at the next stage boundary; returns Future[fn()].
+
+        The generic control-plane entry point: ``fn`` executes on the track
+        executor, serialized with estimator-reservoir updates and between
+        windows, while the model/transform stages keep streaming.  Each
+        scheduled operation bumps the engine ``epoch``.  The fleet
+        calibration plane uses this to land fenced
+        ``publish_quantile_maps(..., generation=...)`` swaps on
+        engine-backed replicas so no in-flight window straddles the swap.
+        """
+        fut: Future = Future()
+
+        def op() -> None:
+            try:
+                with self._lock:
+                    self._epoch += 1
+                fut.set_result(fn())
+            except BaseException as e:  # noqa: BLE001 — surface via future
+                fut.set_exception(e)
+
+        self._track.submit(op)
+        return fut
+
     def schedule_refresh(self, controller: Any,
                          only: "set[tuple[str, str]] | None" = None) -> Future:
         """Schedule ``controller.refresh_fleet`` at the next stage boundary.
 
-        Runs on the track executor: serialized with the estimator-reservoir
-        updates the refit reads, while model/transform stages keep
-        streaming.  In-flight windows finish on their snapshotted
-        generation; the next transform stage picks up the published one.
-        Returns a Future[RefreshResult] stamped with the engine epoch.
+        A :meth:`schedule_control` wrapper that stamps the engine epoch into
+        the refresh: serialized with the estimator-reservoir updates the
+        refit reads, while model/transform stages keep streaming.  In-flight
+        windows finish on their snapshotted generation; the next transform
+        stage picks up the published one.  Returns a Future[RefreshResult].
         """
         fut: Future = Future()
 

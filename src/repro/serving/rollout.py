@@ -11,7 +11,15 @@ that matter for the paper's claims:
     ready; an old replica is drained after;
   * a round-robin load balancer serves live traffic continuously during the
     update, recording per-request latency so the Fig.-5 "no SLO violation
-    during rollout" claim is measurable.
+    during rollout" claim is measurable;
+  * generation-fenced session routing: ``ReplicaSet.dispatch(stream=...)``
+    pins each client stream to replicas at or above the stream's observed
+    ``bank_generation`` high-water mark, and ``fleet_generation()`` audits
+    per-replica divergence — together with the fleet calibration plane
+    (``calibration.FleetCalibrationController``, wired in via
+    ``RollingUpdate(fleet_calibration=...)``) this makes generation stamps
+    fleet-monotone per stream even while replicas are mid-publish or
+    straggling.
 """
 from __future__ import annotations
 
@@ -44,13 +52,47 @@ class Replica:
         target = self.engine if self.engine is not None else self.server
         return target.score_batch(requests)
 
+    @property
+    def bank_generation(self) -> int:
+        """Transform-bank generation this replica currently serves."""
+        return self.server.bank_generation
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetGenerationAudit:
+    """Snapshot of every ready replica's served bank generation.
+
+    ``divergent`` is the condition the fleet calibration plane exists to
+    prevent: two ready replicas answering the same load balancer with
+    different generations, so a client stream bouncing between them can
+    watch its ``bank_generation`` stamp go BACKWARDS mid-conversation.
+    """
+
+    per_replica: tuple[tuple[int, int], ...]   # (replica_id, bank_generation)
+    min_generation: int
+    max_generation: int
+
+    @property
+    def divergent(self) -> bool:
+        return self.min_generation != self.max_generation
+
 
 class ReplicaSet:
-    """Round-robin load balancer over ready replicas."""
+    """Round-robin load balancer over ready replicas.
+
+    ``dispatch(..., stream=...)`` adds generation-fenced session routing:
+    the set remembers the highest ``bank_generation`` each client stream
+    has observed and only routes that stream to replicas serving at or
+    above it, so per-stream generation stamps are monotone across the
+    whole fleet even while a fleet publish (or a straggler) leaves
+    replicas temporarily divergent.
+    """
 
     def __init__(self, replicas: list[Replica]) -> None:
         self.replicas = replicas
         self._rr = itertools.count()
+        # per-stream generation high-water marks (fenced session routing)
+        self._stream_floor: dict[str, int] = {}
 
     @property
     def ready_replicas(self) -> list[Replica]:
@@ -60,12 +102,56 @@ class ReplicaSet:
     def pod_count(self) -> int:
         return len(self.replicas)
 
-    def dispatch(self, requests: list[ScoringRequest]) -> list[ScoringResponse]:
+    def fleet_generation(self) -> FleetGenerationAudit:
+        """Audit helper: which generation is each ready replica serving?
+
+        Before the fleet calibration plane, independent per-replica
+        refreshes made ``audit.divergent`` the steady state during any
+        update; under ``FleetCalibrationController`` the fleet converges to
+        one generation per pass (stragglers excepted — and those are
+        exactly what the fenced ``dispatch`` routes around).
+        """
+        reps = self.ready_replicas or self.replicas
+        gens = tuple((r.replica_id, r.bank_generation) for r in reps)
+        values = [g for _, g in gens] or [-1]
+        return FleetGenerationAudit(gens, min(values), max(values))
+
+    def stream_floor(self, stream: str) -> int:
+        """Highest generation the given client stream has observed (-1 if
+        the stream has never dispatched)."""
+        return self._stream_floor.get(stream, -1)
+
+    def dispatch(self, requests: list[ScoringRequest],
+                 stream: str | None = None) -> list[ScoringResponse]:
+        """Route one batch to a ready replica (round-robin).
+
+        With ``stream``, routing is generation-fenced: only replicas whose
+        ``bank_generation`` is at or above the stream's high-water mark are
+        eligible, and the mark advances to the highest generation stamped
+        on the responses.  A stream that saw generation *g* can therefore
+        never be answered under *g' < g*, no matter how divergent the
+        fleet momentarily is.  Raises if no ready replica satisfies the
+        floor (every up-to-date replica gone — an availability violation,
+        not a silent rollback).
+        """
         ready = self.ready_replicas
         if not ready:
             raise RuntimeError("no ready replicas — availability violated")
-        replica = ready[next(self._rr) % len(ready)]
-        return replica.serve(requests)
+        if stream is None:
+            replica = ready[next(self._rr) % len(ready)]
+            return replica.serve(requests)
+        floor = self._stream_floor.get(stream, -1)
+        eligible = [r for r in ready if r.bank_generation >= floor]
+        if not eligible:
+            raise RuntimeError(
+                f"no ready replica at generation >= {floor} for stream "
+                f"{stream!r} — refusing to serve a generation rollback")
+        replica = eligible[next(self._rr) % len(eligible)]
+        responses = replica.serve(requests)
+        seen = max((r.bank_generation for r in responses), default=floor)
+        if seen > floor:
+            self._stream_floor[stream] = seen
+        return responses
 
 
 @dataclasses.dataclass
@@ -89,6 +175,7 @@ class RollingUpdate:
         warmup_batch_sizes: tuple[int, ...] = (1, 8, 64),
         calibration_factory: Callable[["object"], "object"] | None = None,
         engine_factory: Callable[["object"], "object"] | None = None,
+        fleet_calibration: "object | None" = None,
     ) -> None:
         """``calibration_factory``: optional ``server -> CalibrationController``
         hook.  When set, every promoted replica triggers a fleet calibration
@@ -101,7 +188,17 @@ class RollingUpdate:
         serves through its own pipelined engine, the promotion refresh is
         scheduled at a stage boundary via ``engine.schedule_refresh``
         (never a quiesce), and a drained replica's engine is closed — its
-        barrier guarantees no in-flight window is dropped."""
+        barrier guarantees no in-flight window is dropped.
+
+        ``fleet_calibration``: optional
+        ``calibration.FleetCalibrationController`` bound to this replica
+        set.  When set it REPLACES the per-replica ``calibration_factory``
+        path: a surged replica is generation-aligned (``align``, an empty
+        fenced publish) right after warm-up so fenced session routing can
+        use it immediately, and the promotion refresh is ONE fleet pass —
+        pull + merge every replica's estimator sketches, fit once on the
+        merged view, broadcast under a single fenced fleet generation —
+        instead of N divergent per-replica publishes."""
         self.rs = replica_set
         self.make_server = make_server
         self.new_version = new_version
@@ -109,6 +206,7 @@ class RollingUpdate:
         self.warmup_batch_sizes = warmup_batch_sizes
         self.calibration_factory = calibration_factory
         self.engine_factory = engine_factory
+        self.fleet_calibration = fleet_calibration
         self.refreshes: list["object"] = []   # RefreshResult per promotion
         self._next_id = max((r.replica_id for r in replica_set.replicas),
                             default=-1) + 1
@@ -140,6 +238,12 @@ class RollingUpdate:
             warmup_mod.warm_up(new.server, self.schema_dim,
                                batch_sizes=self.warmup_batch_sizes)
             new.warmup_seconds = time.perf_counter() - t0
+            if self.fleet_calibration is not None:
+                # generation-align the fresh replica BEFORE it takes traffic:
+                # an empty fenced publish fast-forwards its banks to the
+                # fleet generation, so fenced session routing never has to
+                # quarantine the newest replica behind old streams' floors.
+                self.fleet_calibration.align(new)
             new.ready = True
             self._log("ready", new.replica_id)
             yield "warmed"
@@ -149,7 +253,15 @@ class RollingUpdate:
             # transform-bank generation atomically before the old replica
             # drains (clients never see the un-refreshed new model for
             # longer than one warm-up window)
-            if self.calibration_factory is not None:
+            if self.fleet_calibration is not None:
+                # ONE fleet pass replaces N per-replica refreshes: merged
+                # sketches from every replica (new one included), one fit,
+                # one fenced broadcast — no divergent generations behind
+                # the load balancer while the rollout is mid-flight.
+                self.refreshes.append(self.fleet_calibration.refresh_fleet())
+                self._log("calibrate", new.replica_id)
+                yield "calibrated"
+            elif self.calibration_factory is not None:
                 ctrl = self.calibration_factory(new.server)
                 if new.engine is not None \
                         and hasattr(new.engine, "schedule_refresh"):

@@ -78,6 +78,23 @@ from repro.serving.shadow import ShadowSink
 from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
 
 
+class StaleGenerationError(RuntimeError):
+    """A fenced publish arrived with a generation ≤ the one already served.
+
+    The fleet publish protocol stamps every broadcast with the fleet's
+    target generation; a replica that already serves an equal-or-newer
+    generation MUST reject the publish (a late ack from a superseded fleet
+    pass can otherwise roll a replica's transformations backwards).
+    """
+
+    def __init__(self, requested: int, current: int) -> None:
+        super().__init__(
+            f"fenced publish at generation {requested} rejected: replica "
+            f"already serves generation {current}")
+        self.requested = requested
+        self.current = current
+
+
 class FeatureStore:
     """Per-tenant derived-feature lookup (paper's 'Easy Feature Evolution').
 
@@ -383,7 +400,8 @@ class MuseServer:
         """T^Q_v0 -> T^Q_v1 without touching models (Sec. 3.1)."""
         self.publish_quantile_maps({predictor_name: qm})
 
-    def publish_quantile_maps(self, updates: Mapping[str, QuantileMap]) -> int:
+    def publish_quantile_maps(self, updates: Mapping[str, QuantileMap],
+                              *, generation: int | None = None) -> int:
         """Atomically publish refreshed T^Q maps for MANY predictors at once.
 
         The fleet-wide calibration refresh (Sec. 3.1, `serving/calibration.py`)
@@ -394,20 +412,36 @@ class MuseServer:
         old parameters; the next stage sees the complete new generation —
         a batch can never mix rows from two calibration versions.
 
+        ``generation`` is the fleet fencing hook: when given (a fleet-stamped
+        broadcast), the publish lands under exactly that generation and is
+        REJECTED with :class:`StaleGenerationError` unless it is strictly
+        newer than the replica's current one — a late ack from a superseded
+        fleet pass can never roll transformations backwards.  A fenced
+        publish also re-stamps every cached bank (touched or not) to the
+        fleet generation, so response provenance stamps are fleet-monotone,
+        and an EMPTY fenced publish fast-forwards a lagging replica (e.g. a
+        freshly surged one) to the fleet generation without changing maps.
+
         Returns the new bank generation.
         """
         with self._control_lock:
-            return self._publish_quantile_maps_locked(updates)
+            return self._publish_quantile_maps_locked(updates, generation)
 
-    def _publish_quantile_maps_locked(self, updates: Mapping[str, QuantileMap]
-                                      ) -> int:
+    def _publish_quantile_maps_locked(self, updates: Mapping[str, QuantileMap],
+                                      generation: int | None = None) -> int:
         plane = self._plane
         missing = [n for n in updates if n not in plane.predictors]
         if missing:
             raise KeyError(f"unknown predictors: {missing}")
-        if not updates:
-            return plane.generation
-        gen = plane.generation + 1
+        if generation is None:
+            if not updates:
+                return plane.generation
+            gen = plane.generation + 1
+        else:
+            # generation fencing: only strictly-forward fleet publishes land
+            if generation <= plane.generation:
+                raise StaleGenerationError(generation, plane.generation)
+            gen = generation
 
         new_predictors = dict(plane.predictors)
         for name, qm in updates.items():
@@ -421,7 +455,17 @@ class MuseServer:
         for key, entry in dict(plane.banks).items():
             touched = {i: updates[n] for i, n in enumerate(key) if n in updates}
             if not touched:
-                new_banks[key] = entry
+                if generation is None:
+                    new_banks[key] = entry
+                else:
+                    # fenced publish: even untouched banks re-stamp to the
+                    # fleet generation, so every response served after the
+                    # ack carries a fleet-monotone provenance stamp
+                    new_banks[key] = _BankEntry(
+                        entry.pipelines,
+                        entry.bank.with_rows({}, generation=gen),
+                        None if entry.sharded is None
+                        else entry.sharded.with_rows({}, generation=gen))
                 continue
             pipelines = tuple(new_predictors[n].pipeline for n in key)
             # the with_rows fast path (scatter only the refreshed T^Q rows)
@@ -775,6 +819,25 @@ class MuseServer:
         return {k: est for k, est in dict(self._estimators).items()
                 if k[1] in self.predictors}
 
+    def snapshot_estimator_checkpoints(
+        self) -> dict[tuple[str, str], tuple[dict, dict]]:
+        """One consistent (tenant, predictor) -> (arrays, meta) snapshot.
+
+        The fleet calibration plane's PULL endpoint: each live stream is
+        captured in the exact PR-5 checkpoint serialization (reservoir +
+        recent ring + RNG state), taken under the estimator lock so no
+        stream pairs arrays with meta from different moments even while the
+        track stage keeps appending.  The fleet controller merges these per
+        key across replicas (``StreamingQuantileEstimator.merge_checkpoints``)
+        and fits once on the union.  Streams of decommissioned predictors
+        are excluded, same as :meth:`estimator_streams`.
+        """
+        live = self.predictors
+        with self._estimator_lock:
+            return {key: (est.checkpoint_arrays(), est.checkpoint_meta())
+                    for key, est in self._estimators.items()
+                    if key[1] in live}
+
     # ------------------------------------------------- estimator persistence
     def save_estimators(self, directory: str, step: int = 0) -> str:
         """Checkpoint every (tenant, predictor) estimator stream.
@@ -807,9 +870,11 @@ class MuseServer:
         number restored.  Existing streams with the same (tenant,
         predictor) key are replaced wholesale (the checkpoint is the
         warmer state)."""
-        import os
-
-        from repro.training.checkpoint import latest_step, load_metadata
+        from repro.training.checkpoint import (
+            latest_step,
+            load_arrays,
+            load_metadata,
+        )
 
         if step is None:
             step = latest_step(directory)
@@ -817,11 +882,10 @@ class MuseServer:
                 raise FileNotFoundError(f"no checkpoint under {directory}")
         meta = load_metadata(directory, step)
         specs = meta["streams"]
-        # read the npz leaves directly as numpy: the generic
-        # restore_checkpoint path round-trips through jax arrays, which
-        # truncates float64 reservoirs to float32 without x64 enabled
-        with np.load(os.path.join(directory, str(step), "arrays.npz")) as npz:
-            arrays = dict(npz)
+        # raw numpy leaves: the generic restore_checkpoint path round-trips
+        # through jax arrays, which truncates float64 reservoirs to float32
+        # without x64 enabled
+        arrays = load_arrays(directory, step)
         for i, m in enumerate(specs):
             est = StreamingQuantileEstimator.from_checkpoint(
                 {"buf": arrays[f"{i}/buf"], "recent": arrays[f"{i}/recent"]},

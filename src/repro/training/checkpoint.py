@@ -98,6 +98,17 @@ def load_metadata(directory: str, step: int) -> dict:
         return _json_loads(f.read())
 
 
+def load_arrays(directory: str, step: int) -> dict[str, np.ndarray]:
+    """Raw numpy leaves of a checkpoint, keyed by '/'-joined pytree path.
+
+    Unlike :func:`restore_checkpoint` this never round-trips through jax
+    arrays, so float64 leaves (e.g. estimator reservoirs) keep their dtype
+    without x64 enabled.  Dtypes stored as raw bit views (bf16 etc.) are
+    returned as stored; consult ``load_metadata()['dtypes']`` to undo."""
+    with np.load(os.path.join(directory, str(step), "arrays.npz")) as npz:
+        return dict(npz)
+
+
 def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None

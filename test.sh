@@ -8,6 +8,7 @@
 #   ./test.sh --slow         only the slow scenario tests
 #   ./test.sh --concurrency  only the threaded reader/writer + engine tests
 #   ./test.sh --sharded      only the multi-device sharded-bank parity campaign
+#   ./test.sh --fleet        only the multi-replica fleet-calibration campaigns
 #   ./test.sh --all          everything (what CI tier-1 runs)
 #   ./test.sh [pytest args...]   extra args forwarded to pytest
 set -euo pipefail
@@ -23,6 +24,7 @@ case "${1:-}" in
   --slow)        shift; exec python -m pytest -q -m slow "$@" ;;
   --concurrency) shift; exec python -m pytest -q -m concurrency "$@" ;;
   --sharded)     shift; exec python -m pytest -q -m sharded "$@" ;;
+  --fleet)       shift; exec python -m pytest -q -m fleet "$@" ;;
   --all)         shift; exec python -m pytest -q "$@" ;;
-  *)             exec python -m pytest -q -m "not slow and not concurrency and not sharded" "$@" ;;
+  *)             exec python -m pytest -q -m "not slow and not concurrency and not sharded and not fleet" "$@" ;;
 esac

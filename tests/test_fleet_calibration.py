@@ -1,0 +1,580 @@
+"""Fleet-level calibration plane: merged sketches, fenced fleet publish.
+
+Covers the multi-replica invariants the fleet controller exists for:
+
+  * regression — independent per-replica refreshes leave a ``ReplicaSet``
+    with DIVERGENT generations behind the load balancer
+    (``ReplicaSet.fleet_generation().divergent``); one fleet pass converges
+    the same fleet;
+  * fencing — a replica rejects any publish not strictly newer than what it
+    serves (``StaleGenerationError``): late acks from superseded passes can
+    never roll a replica backwards, and empty fenced publishes fast-forward
+    lagging/surged replicas;
+  * stragglers — a replica that nacks a broadcast keeps serving its complete
+    OLD plane (old maps, old generation, internally consistent responses);
+  * structured failure — per-replica pull/publish failures become report
+    entries (``pull_failures`` / ``nacked``), never a raise, and a fully
+    failed pass leaves the fleet generation unchanged;
+  * fenced session routing — ``ReplicaSet.dispatch(stream=...)`` keeps each
+    client stream's observed ``bank_generation`` monotone across the whole
+    fleet, even mid-broadcast (threaded campaign under the fleet marker);
+  * accuracy — the fleet fit over merged sketches matches a single-server
+    fit over the concatenated stream within the documented rank-error bound.
+"""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.predictor import PredictorSpec
+from repro.core.quantiles import (
+    StreamingQuantileEstimator,
+    merge_rank_error_bound,
+    required_sample_size,
+)
+from repro.core.routing import Condition, Intent, RoutingTable, ScoringRule
+from repro.core.transforms import QuantileMap
+from repro.serving import (
+    CalibrationController,
+    FleetCalibrationController,
+    MuseServer,
+    RefreshPolicy,
+    Replica,
+    ReplicaSet,
+    RollingUpdate,
+    ServerConfig,
+    StaleGenerationError,
+)
+from repro.serving.types import ScoringRequest
+
+DIM = 8
+GATE = required_sample_size(0.05, 0.5)
+REF = np.linspace(0.0, 1.0, 64) ** 2
+
+
+def _linear_model(seed: int, dim: int = DIM):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 1, dim).astype(np.float32)
+
+    def score(x):
+        x = np.asarray(x, np.float32)
+        return jnp.asarray(1.0 / (1.0 + np.exp(-(x @ w))))
+
+    return score
+
+
+FACTORIES = {f"m{i}": (lambda i=i: _linear_model(i)) for i in (1, 2)}
+
+
+def _server(n_tenants=2, version="v1") -> MuseServer:
+    rules = tuple(ScoringRule(Condition(tenants=(f"t{i}",)), f"p{i}")
+                  for i in range(n_tenants)) + \
+        (ScoringRule(Condition(), "p0"),)
+    server = MuseServer(
+        RoutingTable(rules, version=version),
+        ServerConfig(refresh_alert_rate=0.05, refresh_rel_error=0.5))
+    for i in range(n_tenants):
+        server.deploy(PredictorSpec(f"p{i}", ("m1", "m2"), (0.2, 0.4),
+                                    (1.0, 1.0), QuantileMap.identity(64)),
+                      FACTORIES)
+    return server
+
+
+def _policy(**kw) -> RefreshPolicy:
+    base = dict(alert_rate=0.05, rel_error=0.5, n_levels=64)
+    base.update(kw)
+    return RefreshPolicy(**base)
+
+
+def _inject(server, tenant, pred, samples, seed=0):
+    est = StreamingQuantileEstimator(capacity=65536, seed=seed,
+                                     recent_capacity=256)
+    est.update(samples)
+    server._estimators[(tenant, pred)] = est
+    return est
+
+
+def _mk_fleet(n_replicas=3, n_tenants=2):
+    reps = [Replica(i, _server(n_tenants), "v1", ready=True)
+            for i in range(n_replicas)]
+    return ReplicaSet(reps), reps
+
+
+def _fill(reps, n_tenants=2, per_rep=None, seed=0):
+    """Split one well-formed stream per (tenant, pred) across all replicas."""
+    per_rep = per_rep if per_rep is not None else GATE // len(reps) + 60
+    rng = np.random.default_rng(seed)
+    full = {}
+    for i in range(n_tenants):
+        data = rng.normal(0.5, 0.15, per_rep * len(reps)).clip(0.0, 1.0)
+        full[(f"t{i}", f"p{i}")] = data
+        for j, rep in enumerate(reps):
+            _inject(rep.server, f"t{i}", f"p{i}",
+                    data[j * per_rep:(j + 1) * per_rep], seed=31 * j + i)
+    return full
+
+
+def _req(tenant, seed=0):
+    rng = np.random.default_rng(seed)
+    return ScoringRequest(intent=Intent(tenant=tenant),
+                          features=rng.normal(0, 1, DIM).astype(np.float32))
+
+
+class TestFleetGenerationAudit:
+    def test_per_replica_refreshes_diverge_fleet_pass_converges(self):
+        """The pre-refactor failure mode, as a pinned regression: refreshing
+        each replica with its own CalibrationController leaves the ready set
+        divergent (a client bouncing across the LB sees generations go
+        backwards); ONE fleet pass over the same fleet converges it."""
+        rs, reps = _mk_fleet(3)
+        _fill(reps, per_rep=GATE + 60)      # every replica locally ready
+        # old world: replica-local refreshes, run on a subset only (exactly
+        # what independent drift alarms firing per replica produce)
+        CalibrationController(reps[0].server, REF, _policy()).refresh_fleet()
+        audit = rs.fleet_generation()
+        assert audit.divergent
+        assert audit.max_generation == 1 and audit.min_generation == 0
+        assert dict(audit.per_replica)[0] == 1
+
+        # new world: one fleet pass, one fenced generation everywhere
+        fleet = FleetCalibrationController(rs, REF, _policy())
+        res = fleet.refresh_fleet()
+        assert res.acked == ("0", "1", "2") and not res.nacked
+        audit = rs.fleet_generation()
+        assert not audit.divergent
+        assert audit.max_generation == res.fleet_generation > 1
+
+    def test_audit_over_empty_ready_set_falls_back_to_all(self):
+        rs, reps = _mk_fleet(2)
+        for r in reps:
+            r.ready = False
+        audit = rs.fleet_generation()
+        assert len(audit.per_replica) == 2
+        assert audit.min_generation == audit.max_generation == 0
+
+
+class TestFencedPublish:
+    def test_stale_fenced_publish_rejected_and_state_unchanged(self):
+        server = _server()
+        server.publish_quantile_maps({}, generation=3)
+        assert server.bank_generation == 3
+        for stale in (1, 3):
+            with pytest.raises(StaleGenerationError) as ei:
+                server.publish_quantile_maps({}, generation=stale)
+            assert ei.value.requested == stale and ei.value.current == 3
+        assert server.bank_generation == 3
+
+    def test_empty_fenced_publish_restamps_served_responses(self):
+        """A fast-forward re-stamps cached banks too: responses after the
+        publish carry the new generation even though no map changed."""
+        server = _server()
+        r0 = server.score_batch([_req("t0")])[0]
+        assert r0.bank_generation == 0
+        server.publish_quantile_maps({}, generation=5)
+        r1 = server.score_batch([_req("t0")])[0]
+        assert r1.bank_generation == 5
+        assert r1.score == pytest.approx(r0.score)   # content unchanged
+
+    def test_align_fast_forwards_surged_replica(self):
+        rs, reps = _mk_fleet(2)
+        fleet = FleetCalibrationController(rs, REF, _policy())
+        reps[0].server.publish_quantile_maps({}, generation=4)
+        new = Replica(9, _server(), "v2", ready=True)
+        assert new.bank_generation == 0
+        assert fleet.align(new) == 4
+        assert new.bank_generation == 4
+        # idempotent: already at (or past) the fleet generation
+        assert fleet.align(new) == 4
+
+
+class TestStragglerSemantics:
+    def test_straggler_keeps_complete_old_plane(self):
+        rs, reps = _mk_fleet(3)
+        _fill(reps)
+        straggler = reps[2]
+        pre = straggler.server.score_batch([_req("t0"), _req("t1", 1)])
+        orig = straggler.server.publish_quantile_maps
+        straggler.server.publish_quantile_maps = (
+            lambda *a, **k: (_ for _ in ()).throw(ConnectionError("down")))
+        fleet = FleetCalibrationController(rs, REF, _policy())
+        res = fleet.refresh_fleet()
+        assert res.acked == ("0", "1") and res.nacked == ("2",)
+        assert len(res.refreshed) == 2, [r.reasons for r in res.reports]
+        # acked replicas moved; the straggler serves its complete OLD plane:
+        # old generation AND old (identity) maps — internally consistent
+        assert reps[0].bank_generation == res.fleet_generation > 0
+        assert straggler.bank_generation == 0
+        post = straggler.server.score_batch([_req("t0"), _req("t1", 1)])
+        for a, b in zip(pre, post):
+            assert b.bank_generation == 0
+            assert b.score == pytest.approx(a.score)
+        straggler.server.publish_quantile_maps = orig
+
+    def test_late_ack_cannot_publish_stale_lower_generation(self):
+        """A straggler that heals and then receives the SUPERSEDED pass's
+        publish (the 'late ack') is fenced out by the generation check."""
+        rs, reps = _mk_fleet(2)
+        _fill(reps)
+        straggler = reps[1]
+        captured = {}
+        orig = straggler.server.publish_quantile_maps
+
+        def failing(updates, *, generation=None):
+            captured["updates"], captured["generation"] = updates, generation
+            raise ConnectionError("partitioned")
+
+        straggler.server.publish_quantile_maps = failing
+        fleet = FleetCalibrationController(rs, REF, _policy())
+        res1 = fleet.refresh_fleet()
+        assert res1.nacked == ("1",)
+        straggler.server.publish_quantile_maps = orig     # partition heals
+        # a second fleet pass lands on the healed replica at a HIGHER fence
+        _fill(reps, seed=1)
+        res2 = fleet.refresh_fleet()
+        assert "1" in res2.acked
+        assert straggler.bank_generation == res2.fleet_generation \
+            > captured["generation"]
+        # the late ack: replaying the superseded pass must be rejected,
+        # leaving the replica on the newer plane
+        with pytest.raises(StaleGenerationError):
+            straggler.server.publish_quantile_maps(
+                captured["updates"], generation=captured["generation"])
+        assert straggler.bank_generation == res2.fleet_generation
+
+    def test_pull_failures_are_structured_and_leave_generation_unchanged(self):
+        class _DownServer:
+            bank_generation = 0
+            predictors = {}
+
+            @staticmethod
+            def snapshot_estimator_checkpoints():
+                raise TimeoutError("no route to replica")
+
+        rs = ReplicaSet([Replica(i, _DownServer(), "v1", ready=True)
+                         for i in range(2)])
+        fleet = FleetCalibrationController(rs, REF, _policy())
+        res = fleet.refresh_fleet()       # must not raise
+        assert [f.replica_id for f in res.pull_failures] == ["0", "1"]
+        assert all("TimeoutError" in f.error for f in res.pull_failures)
+        assert not res.refreshed and not res.acked
+        assert res.fleet_generation == fleet.fleet_generation() == 0
+
+    def test_partial_pull_failure_excludes_replica_from_broadcast(self):
+        rs, reps = _mk_fleet(3)
+        _fill(reps, per_rep=GATE + 60)    # two healthy replicas stay ready
+        broken = reps[1]
+        broken.server.snapshot_estimator_checkpoints = (
+            lambda: (_ for _ in ()).throw(OSError("pull refused")))
+        fleet = FleetCalibrationController(rs, REF, _policy())
+        res = fleet.refresh_fleet()
+        assert [f.replica_id for f in res.pull_failures] == ["1"]
+        assert res.acked == ("0", "2") and not res.nacked
+        assert len(res.refreshed) == 2
+        # the unreachable replica was never sent the broadcast either
+        assert broken.bank_generation == 0
+        assert reps[0].bank_generation == res.fleet_generation > 0
+
+
+class TestFencedSessionRouting:
+    def _divergent_pair(self):
+        rs, reps = _mk_fleet(2)
+        reps[1].server.publish_quantile_maps({}, generation=2)
+        return rs, reps
+
+    def test_stream_floor_pins_stream_to_newer_replicas(self):
+        rs, reps = self._divergent_pair()
+        gens = []
+        for i in range(8):
+            gens.extend(r.bank_generation
+                        for r in rs.dispatch([_req("t0", i)], stream="c1"))
+        assert gens == sorted(gens)            # monotone per stream
+        assert rs.stream_floor("c1") == 2
+        # once pinned, only the gen>=2 replica is eligible
+        for i in range(4):
+            resp = rs.dispatch([_req("t0", i)], stream="c1")
+            assert resp[0].bank_generation == 2
+
+    def test_unsatisfiable_floor_raises_instead_of_rollback(self):
+        rs, reps = self._divergent_pair()
+        while rs.stream_floor("c1") < 2:       # pin the stream at gen 2
+            rs.dispatch([_req("t0")], stream="c1")
+        reps[1].ready = False                  # only the gen-0 replica left
+        with pytest.raises(RuntimeError, match="generation rollback"):
+            rs.dispatch([_req("t0")], stream="c1")
+        # unfenced dispatch (no stream identity) still serves
+        assert rs.dispatch([_req("t0")])[0].bank_generation == 0
+
+    def test_streams_are_independent(self):
+        rs, _ = self._divergent_pair()
+        while rs.stream_floor("hot") < 2:
+            rs.dispatch([_req("t0")], stream="hot")
+        assert rs.stream_floor("cold") == -1   # untouched stream unpinned
+        rs.dispatch([_req("t0")], stream="cold")
+        assert rs.stream_floor("cold") >= 0
+
+
+class TestMergedFitAccuracy:
+    def test_fleet_fit_matches_single_stream_fit_within_bound(self):
+        """End-to-end accuracy: the map published from MERGED sketches must
+        agree with the map a single server fits on the CONCATENATED stream,
+        within the documented merge rank-error bound."""
+        rs, reps = _mk_fleet(3)
+        full = _fill(reps, per_rep=4 * GATE)   # deep streams: tight bound
+        fleet = FleetCalibrationController(rs, REF, _policy())
+        res = fleet.refresh_fleet()
+        assert len(res.refreshed) == 2, [r.reasons for r in res.reports]
+
+        solo_srv = _server()
+        for (t, p), data in full.items():
+            _inject(solo_srv, t, p, data, seed=97)
+        solo = CalibrationController(solo_srv, REF, _policy())
+        solo_res = solo.refresh_fleet()
+        assert len(solo_res.refreshed) == 2
+
+        cap = 65536
+        bound = merge_rank_error_bound(cap, cap) + \
+            merge_rank_error_bound(len(next(iter(full.values()))))
+        for (t, p), data in full.items():
+            fleet_q = np.asarray(
+                reps[0].server.predictors[p].pipeline.src_quantiles)
+            data_sorted = np.sort(data)
+            levels = np.linspace(0.0, 1.0, len(fleet_q))
+            ranks = np.searchsorted(data_sorted, fleet_q,
+                                    side="right") / len(data)
+            interior = slice(2, -2)        # endpoint ranks saturate at 0/1
+            assert np.max(np.abs(ranks - levels)[interior]) <= \
+                max(bound, 0.02)
+            solo_q = np.asarray(
+                solo_srv.predictors[p].pipeline.src_quantiles)
+            solo_ranks = np.searchsorted(data_sorted, solo_q,
+                                         side="right") / len(data)
+            assert np.max(np.abs(ranks - solo_ranks)[interior]) <= \
+                max(2 * bound, 0.02)
+
+    def test_only_filter_widens_to_predictor_on_fleet_path(self):
+        rs, reps = _mk_fleet(2, n_tenants=2)
+        _fill(reps)
+        fleet = FleetCalibrationController(rs, REF, _policy())
+        res = fleet.refresh_fleet(only={("t0", "p0")})
+        touched = {(r.tenant, r.predictor) for r in res.reports}
+        assert ("t1", "p1") not in touched    # other predictor untouched
+        assert {(r.tenant, r.predictor) for r in res.refreshed} \
+            == {("t0", "p0")}
+
+
+@pytest.mark.fleet
+@pytest.mark.concurrency
+class TestFleetCampaigns:
+    """Threaded multi-replica campaigns: live traffic through the fenced LB
+    while the fleet plane publishes — no client stream may ever observe its
+    ``bank_generation`` go backwards, straggler or not."""
+
+    def test_interleaved_readers_never_observe_generation_rollback(self):
+        rs, reps = _mk_fleet(3)
+        _fill(reps)
+        fleet = FleetCalibrationController(rs, REF, _policy())
+        for rep in reps:      # warm XLA traces so readers aren't compile-bound
+            rep.server.score_batch([_req("t0"), _req("t1", 1)])
+        streams = [f"client-{i}" for i in range(4)]
+        observed: dict[str, list[int]] = {s: [] for s in streams}
+        errors: list[BaseException] = []
+        stop = threading.Event()
+
+        def reader(stream: str) -> None:
+            i = 0
+            try:
+                while not stop.is_set():
+                    tenant = f"t{i % 2}"
+                    for r in rs.dispatch([_req(tenant, i)], stream=stream):
+                        observed[stream].append(r.bank_generation)
+                    i += 1
+            except BaseException as e:  # noqa: BLE001 — assert on main thread
+                errors.append(e)
+
+        def writer() -> None:
+            try:
+                for round_ in range(4):
+                    # refill so every pass has ready streams, then one
+                    # fenced fleet broadcast; round 2 runs with a straggler
+                    _fill(reps, seed=round_ + 10)
+                    if round_ == 2:
+                        orig = reps[2].server.publish_quantile_maps
+                        reps[2].server.publish_quantile_maps = (
+                            lambda *a, **k:
+                            (_ for _ in ()).throw(ConnectionError("down")))
+                        res = fleet.refresh_fleet()
+                        assert res.nacked == ("2",)
+                        reps[2].server.publish_quantile_maps = orig
+                    else:
+                        fleet.refresh_fleet()
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=reader, args=(s,))
+                   for s in streams]
+        wt = threading.Thread(target=writer)
+        for t in threads:
+            t.start()
+        wt.start()
+        wt.join(timeout=300)
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errors, errors
+        # one more fenced dispatch per stream AFTER the last broadcast: every
+        # stream must land on the final fleet generation without rollback
+        for s in streams:
+            for r in rs.dispatch([_req("t0")], stream=s):
+                observed[s].append(r.bank_generation)
+        for s, gens in observed.items():
+            assert gens, f"stream {s} never served"
+            assert gens == sorted(gens), f"rollback observed on {s}"
+            assert gens[-1] == fleet.fleet_generation()
+        # the straggler healed on the final round: fleet converged
+        assert not rs.fleet_generation().divergent
+
+    def test_rolling_promotion_with_fleet_plane_keeps_streams_monotone(self):
+        """Rolling update + fleet calibration mid-stream: surged replicas
+        are generation-aligned before taking traffic, the promotion refresh
+        is ONE fleet pass, and every client stream's generation stays
+        monotone across the whole replica churn."""
+        rs, reps = _mk_fleet(3)
+        _fill(reps)
+        fleet = FleetCalibrationController(rs, REF, _policy())
+        base = fleet.refresh_fleet()
+        assert len(base.refreshed) == 2 and len(base.acked) == 3
+
+        def make_server_v2():
+            srv = _server(version="v2")
+            _fill([Replica(-1, srv, "v2")], per_rep=GATE + 60, seed=77)
+            return srv
+
+        update = RollingUpdate(rs, make_server_v2, "v2", schema_dim=DIM,
+                               warmup_batch_sizes=(1, 4),
+                               fleet_calibration=fleet)
+        observed: dict[str, list[int]] = {"s0": [], "s1": []}
+
+        def serve_some():
+            for i, s in enumerate(observed):
+                for r in rs.dispatch([_req(f"t{i}", i)], stream=s):
+                    observed[s].append(r.bank_generation)
+
+        serve_some()
+        for _ in update.steps():
+            serve_some()
+        serve_some()
+
+        assert [r.version for r in rs.replicas] == ["v2"] * 3
+        assert len(update.refreshes) == 3          # one fleet pass per surge
+        for s, gens in observed.items():
+            assert gens == sorted(gens), f"rollback observed on {s}"
+        audit = rs.fleet_generation()
+        assert not audit.divergent
+        assert audit.max_generation == fleet.fleet_generation()
+
+    def test_fraudworld_lifecycle_with_straggler_and_promotion(self):
+        """The ISSUE-6 e2e scenario on FraudWorld traffic: 3 replicas behind
+        the fenced LB, fleet refresh with a straggling replica (old plane
+        until it acks), heal + reconverge, rolling promotion driven by the
+        fleet plane mid-stream — per-stream generations monotone across
+        replicas throughout, and post-refresh per-tenant alert rates on
+        target (the merged fit is as good as a single-stream fit)."""
+        from repro.experiments.fraud_world import DIM as FDIM
+        from repro.experiments.fraud_world import FraudWorld
+        from repro.serving.drift import realized_alert_rate
+        from repro.training.data import FraudEventStream, TenantProfile
+
+        a, B = 0.02, 120
+        world = FraudWorld.build(n_experts=2, betas=(0.18, 0.18), seed=17,
+                                 client_shift=0.3)
+        tenants = ["bank0", "bank1"]
+        feeds = {
+            t: FraudEventStream(TenantProfile(
+                t, fraud_rate=0.006 + 0.003 * i,
+                feature_shift=0.25 + 0.06 * i, seed=500 + i))
+            for i, t in enumerate(tenants)
+        }
+        policy = RefreshPolicy(alert_rate=a, rel_error=0.3)
+        qm0 = world.coldstart_quantile_map(("m1", "m2"), n_trials=1)
+
+        def build_server(version):
+            rules = tuple(ScoringRule(Condition(tenants=(t,)), f"p-{t}")
+                          for t in tenants)
+            srv = MuseServer(
+                RoutingTable(rules, version=version),
+                ServerConfig(refresh_alert_rate=a, refresh_rel_error=0.3))
+            for t in tenants:
+                srv.deploy(world.predictor_spec(f"p-{t}", ("m1", "m2"), qm0),
+                           world.model_factories())
+            return srv
+
+        reps = [Replica(i, build_server("v1"), "v1", ready=True)
+                for i in range(3)]
+        rs = ReplicaSet(reps)
+        fleet = FleetCalibrationController(rs, world.ref_quantiles, policy)
+        observed: dict[str, list[int]] = {t: [] for t in tenants}
+
+        def serve_phase(n_batches):
+            out = []
+            for _ in range(n_batches):
+                for t in tenants:
+                    xs = feeds[t].sample(B)[0]
+                    reqs = [ScoringRequest(intent=Intent(tenant=t),
+                                           features=xs[i]) for i in range(B)]
+                    for r in rs.dispatch(reqs, stream=t):
+                        observed[t].append(r.bank_generation)
+                        out.append(r)
+            return out
+
+        # Phase A: cold-start maps serve while the fleet's streams fill past
+        # the MERGED Eq.-5 gate (each replica alone stays below it).
+        gate = required_sample_size(a, 0.3)
+        serve_phase(gate // B + 2)
+        for rep in reps:
+            for t in tenants:
+                est = rep.server._estimators[(t, f"p-{t}")]
+                assert not est.ready(a, 0.3)       # no replica ready alone
+
+        # Fleet refresh with a straggler: replicas 0/1 move, 2 keeps its
+        # complete old plane and is routed around by the fenced LB.
+        straggler = reps[2]
+        orig = straggler.server.publish_quantile_maps
+        straggler.server.publish_quantile_maps = (
+            lambda *args, **kw: (_ for _ in ()).throw(ConnectionError("down")))
+        res1 = fleet.refresh_fleet()
+        assert len(res1.refreshed) == 2, [r.reasons for r in res1.reports]
+        assert res1.nacked == ("2",) and res1.acked == ("0", "1")
+        assert straggler.bank_generation == 0
+        pre_heal = straggler.server.score_batch(
+            [ScoringRequest(intent=Intent(tenant="bank0"),
+                            features=feeds["bank0"].sample(1)[0][0])])
+        assert pre_heal[0].bank_generation == 0    # old plane, old stamp
+
+        # Heal: the straggler acks the next pass and reconverges.
+        straggler.server.publish_quantile_maps = orig
+        res2 = fleet.refresh_fleet()
+        assert "2" in res2.acked
+        assert not rs.fleet_generation().divergent
+
+        # Phase B: refreshed maps on live traffic — the merged fit holds the
+        # paper's alert-rate invariant per tenant.
+        post = serve_phase(6)
+        for t in tenants:
+            scores = np.asarray([r.score for r in post
+                                 if r.predictor == f"p-{t}"])
+            rate = realized_alert_rate(scores, world.ref_quantiles, a)
+            assert rate == pytest.approx(a, abs=0.012), (t, rate)
+
+        # Rolling promotion mid-stream, calibrated through the fleet plane.
+        update = RollingUpdate(rs, lambda: build_server("v2"), "v2",
+                               schema_dim=FDIM, warmup_batch_sizes=(1, B),
+                               fleet_calibration=fleet)
+        for _ in update.steps():
+            serve_phase(1)
+        serve_phase(1)
+
+        assert [r.version for r in rs.replicas] == ["v2"] * 3
+        for t, gens in observed.items():
+            assert gens == sorted(gens), f"rollback observed on {t}"
+        assert not rs.fleet_generation().divergent

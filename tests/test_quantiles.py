@@ -7,6 +7,7 @@ from repro.core.quantiles import (
     StreamingQuantileEstimator,
     alert_rate_rel_error,
     batch_quantiles,
+    merge_rank_error_bound,
     required_sample_size,
 )
 
@@ -104,3 +105,150 @@ class TestBatchQuantiles:
         levels, q = batch_quantiles(rng.random(1000), 65)
         assert (np.diff(q) >= 0).all()
         assert len(levels) == len(q) == 65
+
+
+class TestMergeableSketches:
+    """The fleet-calibration reduction: merge() must behave like a single
+    estimator fed the concatenated stream, up to the documented rank-error
+    bound (``merge_rank_error_bound``)."""
+
+    LEVELS = np.linspace(0.02, 0.98, 25)
+
+    @staticmethod
+    def _rank_error(data: np.ndarray, est_q: np.ndarray,
+                    levels: np.ndarray) -> float:
+        ranks = np.searchsorted(np.sort(data), est_q, side="right") / len(data)
+        return float(np.max(np.abs(ranks - levels)))
+
+    @given(st.integers(2, 6), st.integers(0, 2**31 - 1),
+           st.booleans())
+    @settings(max_examples=8, deadline=None)
+    def test_random_splits_match_single_stream_within_bound(
+            self, n_parts, seed, lognormal):
+        """Split one stream randomly across n estimators, merge, and compare
+        against the full stream: the merged sketch's quantile rank error
+        must stay inside the documented two-stage subsampling bound."""
+        rng = np.random.default_rng(seed)
+        cap = 512
+        n = 12_000
+        data = rng.lognormal(0.0, 0.6, n) if lognormal \
+            else rng.normal(0.0, 1.0, n)
+        split = np.sort(rng.choice(np.arange(1, n), n_parts - 1,
+                                   replace=False))
+        parts = np.split(rng.permutation(data), split)
+        ests = []
+        for i, chunk in enumerate(parts):
+            e = StreamingQuantileEstimator(capacity=cap, seed=seed + i,
+                                           recent_capacity=64)
+            if len(chunk):
+                e.update(chunk)
+            ests.append(e)
+        merged = StreamingQuantileEstimator.merged(ests)
+        assert merged.count == n
+        err = self._rank_error(data, merged.quantiles(self.LEVELS),
+                               self.LEVELS)
+        # two uniform-subsampling stages of size >= cap (per-part reservoirs,
+        # then the merge reselection); bound documented in core/quantiles.py
+        bound = merge_rank_error_bound(cap, cap)
+        assert err <= bound, (err, bound)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=6, deadline=None)
+    def test_acceptance_counts_associative_and_commutative(self, seed):
+        """count/seen/retained-size are exactly invariant under merge order
+        and grouping (the sampled VALUES may differ — the reduction is
+        randomized — but the acceptance accounting may not)."""
+        rng = np.random.default_rng(seed)
+        cap = 128
+        ests = []
+        for i in range(4):
+            e = StreamingQuantileEstimator(capacity=cap, seed=seed + 7 * i,
+                                           recent_capacity=32)
+            e.update(rng.normal(i, 1.0, int(rng.integers(10, 900))))
+            ests.append(e)
+        a, b, c, d = ests
+        total = sum(e.count for e in ests)
+
+        def stats(m):
+            return (m.count, len(m.values()), m.capacity, m.recent_capacity)
+
+        flat = StreamingQuantileEstimator.merged(ests)
+        rev = StreamingQuantileEstimator.merged(ests[::-1])
+        left = StreamingQuantileEstimator.merged(
+            [StreamingQuantileEstimator.merged([a, b]), c, d])
+        right = StreamingQuantileEstimator.merged(
+            [a, StreamingQuantileEstimator.merged([b, c, d])])
+        assert stats(flat) == stats(rev) == stats(left) == stats(right)
+        assert flat.count == total
+        assert len(flat.values()) == min(total, cap)
+
+    def test_merge_preserves_exact_union_below_capacity(self):
+        """While the union of retained samples fits, merge is LOSSLESS."""
+        a = StreamingQuantileEstimator(capacity=1024, seed=1)
+        b = StreamingQuantileEstimator(capacity=1024, seed=2)
+        xa, xb = np.arange(100.0), np.arange(100.0, 250.0)
+        a.update(xa)
+        b.update(xb)
+        m = a.merge(b)
+        assert m.count == 250
+        np.testing.assert_array_equal(np.sort(m.values()), np.arange(250.0))
+
+    def test_checkpoint_roundtrip_after_merge_is_exact(self):
+        """A merged estimator checkpoints/restores bit-exactly AND the
+        restored copy evolves identically under further updates."""
+        rng = np.random.default_rng(3)
+        ests = []
+        for i in range(3):
+            e = StreamingQuantileEstimator(capacity=256, seed=i,
+                                           recent_capacity=32)
+            e.update(rng.normal(0, 1, 700))
+            ests.append(e)
+        m = StreamingQuantileEstimator.merged(ests)
+        r = StreamingQuantileEstimator.from_checkpoint(
+            m.checkpoint_arrays(), m.checkpoint_meta())
+        np.testing.assert_array_equal(m.values(), r.values())
+        np.testing.assert_array_equal(m.recent(), r.recent())
+        assert m.count == r.count
+        extra = rng.normal(0, 1, 500)
+        m.update(extra)
+        r.update(extra)
+        np.testing.assert_array_equal(m.values(), r.values())
+        np.testing.assert_array_equal(m.recent(), r.recent())
+
+    def test_merge_checkpoints_equals_merge_of_estimators(self):
+        """The wire-format reduction (merge_checkpoints) is the same
+        operation as merging the live estimators."""
+        rng = np.random.default_rng(9)
+        ests = []
+        for i in range(3):
+            e = StreamingQuantileEstimator(capacity=128, seed=100 + i)
+            e.update(rng.normal(0, 1, 400))
+            ests.append(e)
+        via_ckpt = StreamingQuantileEstimator.merge_checkpoints(
+            [(e.checkpoint_arrays(), e.checkpoint_meta()) for e in ests])
+        direct = StreamingQuantileEstimator.merged(ests)
+        np.testing.assert_array_equal(np.sort(via_ckpt.values()),
+                                      np.sort(direct.values()))
+        assert via_ckpt.count == direct.count
+
+    def test_merged_estimator_keeps_streaming(self):
+        """Post-merge updates behave like a normal estimator: count grows,
+        reservoir stays at capacity, recent ring tracks the newest tail."""
+        ests = []
+        rng = np.random.default_rng(11)
+        for i in range(2):
+            e = StreamingQuantileEstimator(capacity=64, seed=i,
+                                           recent_capacity=16)
+            e.update(rng.normal(0, 1, 200))
+            ests.append(e)
+        m = StreamingQuantileEstimator.merged(ests)
+        m.update(np.full(16, 42.0))
+        assert m.count == 416
+        assert len(m.values()) == 64
+        np.testing.assert_array_equal(m.recent(), np.full(16, 42.0))
+
+    def test_bound_shrinks_with_stage_size(self):
+        assert merge_rank_error_bound(4096) < merge_rank_error_bound(256)
+        assert merge_rank_error_bound(256, 256) \
+            == pytest.approx(2 * merge_rank_error_bound(256))
+        assert merge_rank_error_bound() == 0.0
