@@ -1,0 +1,188 @@
+"""Dispatch latency under adversarial attack traffic, full client stack ON.
+
+The adversarial-campaign suite proves the closed loop keeps the alert-rate
+SLO; this benchmark prices it.  Every served window runs the ENTIRE
+production path — fenced ``ReplicaSet.dispatch`` (tracking included), the
+client :class:`~repro.serving.decision_loop.DecisionLoop`, hash-chained
+:class:`~repro.serving.audit.AuditLog` appends, and the drift controller's
+``observe``/``tick`` — and we compare per-window dispatch latency between
+
+  * **quiet** — stationary benign traffic (no wave active), and
+  * **attack** — an :class:`AttackWave` burst on the measured tenant
+    (fraud share x24, boundary-drifted malicious mass), which is also what
+    makes the drift controller actually alarm + refresh mid-measurement.
+
+Headline numbers: p50/p99 window latency and us/event for both regimes,
+the attack/quiet p99 ratio (the "does an attack DoS the data plane?"
+question — it must stay near 1), and the amortized audit append cost.
+Emits ``benchmarks/results/BENCH_attack_campaign.json``.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predictor import PredictorSpec
+from repro.core.routing import Condition, Intent, RoutingTable, ScoringRule
+from repro.core.transforms import QuantileMap
+from repro.experiments.fraud_world import AttackCampaign, AttackWave
+from repro.serving import (
+    AuditLog,
+    DecisionLoop,
+    DecisionPolicy,
+    FleetCalibrationController,
+    GenerationLedger,
+    MuseServer,
+    RefreshPolicy,
+    Replica,
+    ReplicaSet,
+    ServerConfig,
+)
+from repro.serving.drift import CalibrationRefreshController
+from repro.serving.types import ScoringRequest
+from repro.training.data import TenantProfile
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results",
+                            "BENCH_attack_campaign.json")
+DIM = 8
+ALERT_RATE = 0.05
+REF = np.linspace(0.0, 1.0, 64)
+TENANTS = ("t0", "t1")
+WINDOW = 128
+
+
+def _campaign() -> AttackCampaign:
+    wave = AttackWave(name="burst", targets=("t0",), start_day=1,
+                      duration=30, fraud_multiplier=24.0,
+                      separation_scale=0.6, drift_per_day=0.02,
+                      boundary_mass=0.25, boundary_scale=0.55)
+    tenants = {t: TenantProfile(t, fraud_rate=0.01,
+                                feature_shift=0.25 + 0.05 * i, seed=900 + i)
+               for i, t in enumerate(TENANTS)}
+    return AttackCampaign(tenants=tenants, waves=(wave,), promotion_days=(),
+                          n_days=31, dim=DIM, seed=7)
+
+
+def _expert(direction: np.ndarray):
+    w = np.asarray(direction, np.float32)
+
+    def score(x):
+        x = np.asarray(x, np.float32)
+        return jnp.asarray(1.0 / (1.0 + np.exp(-(x @ w))), jnp.float32)
+
+    return score
+
+
+def _server(campaign: AttackCampaign) -> MuseServer:
+    factories = {f"e{i}": (lambda d=campaign._direction(t): _expert(d))
+                 for i, t in enumerate(TENANTS)}
+    rules = tuple(ScoringRule(Condition(tenants=(t,)), f"p{i}")
+                  for i, t in enumerate(TENANTS)) + \
+        (ScoringRule(Condition(), "p0"),)
+    server = MuseServer(
+        RoutingTable(rules, version="v1"),
+        ServerConfig(quantile_capacity=8192, recent_capacity=512,
+                     refresh_alert_rate=ALERT_RATE, refresh_rel_error=0.5))
+    for i, t in enumerate(TENANTS):
+        server.deploy(PredictorSpec(f"p{i}", (f"e{i}",), (0.2,), (1.0,),
+                                    QuantileMap.identity(64)), factories)
+    return server
+
+
+def _measure(campaign: AttackCampaign, days: range, n_windows: int,
+             warm_windows: int) -> dict:
+    """Serve ``n_windows`` of traffic drawn from ``days``; full stack ON."""
+    reps = [Replica(i, _server(campaign), "v1", ready=True) for i in range(2)]
+    rs = ReplicaSet(reps)
+    fleet = FleetCalibrationController(
+        rs, REF, RefreshPolicy(alert_rate=ALERT_RATE, rel_error=0.5,
+                               n_levels=64, fit_window="recent"))
+    ctrl = CalibrationRefreshController(None, REF, psi_alarm=0.08,
+                                        window=768, reject_cooldown=2,
+                                        fleet=fleet)
+    audit, ledger = AuditLog(), GenerationLedger()
+    loop = DecisionLoop(DecisionPolicy(alert_rate=ALERT_RATE,
+                                       block_rate=0.001), REF, audit=audit)
+    rid = itertools.count()
+    day_cycle = itertools.cycle(days)
+    lat_ms: list[float] = []
+    audit_s = 0.0
+    for w in range(warm_windows + n_windows):
+        day = next(day_cycle)
+        for ti, t in enumerate(TENANTS):
+            x, _ = campaign.sample(t, day, WINDOW)
+            reqs = [ScoringRequest(intent=Intent(tenant=t), features=f,
+                                   request_id=next(rid)) for f in x]
+            t0 = time.perf_counter()
+            resps = rs.dispatch(reqs, stream=t)
+            dt = time.perf_counter() - t0
+            ta = time.perf_counter()
+            loop.process(reqs, resps)
+            audit_s += time.perf_counter() - ta
+            ctrl.observe(t, resps[0].predictor,
+                         np.asarray([r.score for r in resps]))
+            ctrl.tick()
+            if w >= warm_windows and ti == 0:   # measure the attacked tenant
+                lat_ms.append(dt * 1e3)
+        if w == 0:
+            fleet.refresh_fleet()
+    ledger.record_replicas(rs)
+    lat = np.asarray(lat_ms)
+    return {
+        "windows": len(lat_ms),
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "us_per_event": float(lat.mean() * 1e3 / WINDOW),
+        "audit_us_per_event": float(
+            audit_s * 1e6 / max(len(audit), 1)),
+        "audit_entries": len(audit),
+        "refreshes": len(ctrl.refreshes),
+        "ledger_generations": sorted(ledger.generations()),
+    }
+
+
+def run(quick: bool = False) -> dict:
+    campaign = _campaign()
+    n_windows = 30 if quick else 120
+    warm = 4 if quick else 8
+    quiet = _measure(campaign, range(0, 1), n_windows, warm)
+    attack = _measure(campaign, range(1, campaign.n_days), n_windows, warm)
+    result = {
+        "window": WINDOW,
+        "tenants": list(TENANTS),
+        "quiet": quiet,
+        "attack": attack,
+        "p99_ms_quiet": quiet["p99_ms"],
+        "p99_ms_attack": attack["p99_ms"],
+        "p99_ratio_attack_vs_quiet": attack["p99_ms"] /
+        max(quiet["p99_ms"], 1e-9),
+        "us_per_event_attack": attack["us_per_event"],
+        "audit_us_per_event": attack["audit_us_per_event"],
+        "attack_refreshes": attack["refreshes"],
+    }
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    r = run()
+    for label in ("quiet", "attack"):
+        row = r[label]
+        print(f"{label:>6}: p50={row['p50_ms']:.2f}ms  "
+              f"p99={row['p99_ms']:.2f}ms  "
+              f"us/event={row['us_per_event']:.1f}  "
+              f"audit_us/event={row['audit_us_per_event']:.2f}  "
+              f"refreshes={row['refreshes']}")
+    print(f"p99 attack/quiet ratio: {r['p99_ratio_attack_vs_quiet']:.2f}")
+    print(f"results -> {RESULTS_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -122,6 +122,16 @@ def main() -> None:
          f"refit_ratio_max_vs_min={r['refit_ratio_max_vs_min']:.2f};"
          f"all_within_bound={r['all_within_bound']}")
 
+    # ---- adversarial campaign: dispatch latency with full client stack on --
+    from benchmarks import bench_attack_campaign
+    r = bench_attack_campaign.run(quick=quick)
+    _csv("attack_campaign", r["us_per_event_attack"],
+         f"p99_quiet_ms={r['p99_ms_quiet']:.2f};"
+         f"p99_attack_ms={r['p99_ms_attack']:.2f};"
+         f"p99_ratio={r['p99_ratio_attack_vs_quiet']:.2f};"
+         f"audit_us_per_event={r['audit_us_per_event']:.2f};"
+         f"attack_refreshes={r['attack_refreshes']}")
+
     # ---- async banked dispatch engine vs synchronous ServerBatcher ----------
     from benchmarks import bench_async_engine
     r = bench_async_engine.run(quick=quick)

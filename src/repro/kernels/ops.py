@@ -39,6 +39,12 @@ def score_pipeline(expert_scores: Array, betas: Array, weights: Array,
     )
 
 
+def banked_skip_stats(tenant_idx, *, block: int = _sp.DEFAULT_BLOCK) -> dict:
+    """Host-side uniform-block fast-path report for a tenant layout (see
+    :func:`repro.kernels.score_pipeline.banked_skip_stats`)."""
+    return _sp.banked_skip_stats(tenant_idx, block=block)
+
+
 def score_pipeline_banked(expert_scores: Array, tenant_idx: Array,
                           betas: Array, weights: Array,
                           src_quantiles: Array, ref_quantiles: Array,

@@ -66,7 +66,28 @@ per-shard sub-banks (scattering refreshed rows only into their owning
 shard) inside the SAME single control-plane swap.  Generations therefore
 stay fleet-monotone across shards — a window can never observe shard A at
 generation g and shard B at g+1.
+
+Client decision loop + audit trail
+----------------------------------
+
+On top of the served scores sits the CLIENT side of the paper's contract:
+:class:`~repro.serving.decision_loop.DecisionLoop` holds fixed per-tenant
+thresholds over the *transformed* scores (grace / cooldown / instant-block
+semantics) and emits a per-event :class:`~repro.serving.decision_loop.Decision`
+keyed by request id; :class:`~repro.serving.audit.AuditLog` chains every
+decision into a hash-chained, ``bank_generation``-stamped trail whose
+``verify`` replays each entry — score bit-for-bit through the exact
+generation's archived transform parameters
+(:class:`~repro.serving.audit.GenerationLedger`), action through the pure
+``decide`` function — and detects any tamper, splice, or truncation.
 """
+from repro.serving.audit import (
+    AuditEntry,
+    AuditFailure,
+    AuditLog,
+    AuditVerification,
+    GenerationLedger,
+)
 from repro.serving.batching import MicroBatcher, ServerBatcher
 from repro.serving.calibration import (
     CalibrationController,
@@ -76,6 +97,12 @@ from repro.serving.calibration import (
     RefreshPolicy,
     RefreshResult,
     ReplicaPullFailure,
+)
+from repro.serving.decision_loop import (
+    Decision,
+    DecisionLoop,
+    DecisionPolicy,
+    decide,
 )
 from repro.serving.engine import AsyncDispatchEngine
 from repro.serving.rollout import (
@@ -95,11 +122,13 @@ from repro.serving.shadow import ShadowSink
 from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
 
 __all__ = [
-    "AsyncDispatchEngine", "MicroBatcher", "ServerBatcher", "Replica",
+    "AsyncDispatchEngine", "AuditEntry", "AuditFailure", "AuditLog",
+    "AuditVerification", "MicroBatcher", "ServerBatcher", "Replica",
     "ReplicaSet", "RollingUpdate", "CalibrationController", "CandidateReport",
+    "Decision", "DecisionLoop", "DecisionPolicy", "decide",
     "FleetCalibrationController", "FleetGenerationAudit", "FleetRefreshResult",
-    "RefreshPolicy", "RefreshResult", "ReplicaPullFailure", "FeatureStore",
-    "MuseServer", "ServerConfig", "ShardedBankDispatcher",
+    "GenerationLedger", "RefreshPolicy", "RefreshResult", "ReplicaPullFailure",
+    "FeatureStore", "MuseServer", "ServerConfig", "ShardedBankDispatcher",
     "StaleGenerationError", "ShadowSink", "ScoringRequest", "ScoringResponse",
     "ShadowRecord",
 ]

@@ -101,6 +101,16 @@ class RefreshPolicy:
     alert_rate_tolerance: float = 0.5   # |realized - a| / a bound at tau
     min_distinct_knots: int = 8     # support coverage: degenerate-fit guard
     drift_bins: int = 10
+    # which window the refit (and its validation) sees per stream:
+    #   "reservoir" — the all-time uniform reservoir (default; right when
+    #     the stream is stationary-but-miscalibrated, e.g. after a model
+    #     promotion);
+    #   "recent"    — the newest-samples ring (the Full-range-Calibration
+    #     regime: a FAST-drifting malicious distribution is diluted to
+    #     invisibility in the all-time reservoir, so a drift-triggered
+    #     refresh must fit on what the stream looks like NOW).
+    # The Eq.-5 gate still counts total observed events either way.
+    fit_window: str = "reservoir"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -301,14 +311,22 @@ class CalibrationController:
         # streams are grouped by predictor (the published unit); a predictor
         # serving several ready tenant streams is refit on the pooled
         # samples, and the pooled candidate must validate against EVERY
-        # tenant's stream before it may ship.
+        # tenant's stream before it may ship.  ``fit_window`` picks WHICH
+        # samples: the all-time reservoir, or (for fast-drift refreshes)
+        # the recent ring — validated against the same window, since that
+        # is the distribution the candidate will serve next.
+        def fit_values(s: StreamSnapshot) -> np.ndarray:
+            if p.fit_window == "recent" and len(s.recent):
+                return s.recent
+            return s.values
+
         t0 = time.perf_counter()
         by_pred: dict[str, list[StreamSnapshot]] = {}
         for (tenant, pred), s in ready.items():
             by_pred.setdefault(pred, []).append(s)
         pred_names = sorted(by_pred)
         levels = np.linspace(0.0, 1.0, p.n_levels)
-        pooled = [np.concatenate([s.values for s in by_pred[n]])
+        pooled = [np.concatenate([fit_values(s) for s in by_pred[n]])
                   for n in pred_names]
         src_tables = batch_sample_quantiles(pooled, levels)   # (R, n_levels)
         refit_s = time.perf_counter() - t0
@@ -325,7 +343,8 @@ class CalibrationController:
             stream_reports: list[CandidateReport] = []
             for s in by_pred[pred]:
                 reasons, drift, rate = self._validate(
-                    src, ref, s.values, s.recent if len(s.recent) else None)
+                    src, ref, fit_values(s),
+                    s.recent if len(s.recent) else None)
                 ok = not reasons
                 ship = ship and ok
                 stream_reports.append(CandidateReport(
@@ -474,6 +493,14 @@ class FleetCalibrationController(CalibrationController):
         self.replica_set = replica_set
         self.publish_timeout = publish_timeout
         self._fleet_generation = 0
+        # cumulative content of the fleet plane: every map ever published,
+        # newest per predictor.  Broadcasting the UNION each pass (and on
+        # ``align``) makes a generation's CONTENT fleet-consistent, not just
+        # its stamp: a healed straggler or a freshly surged replica receives
+        # the maps it missed, so the audit ledger's (generation, predictor)
+        # -> parameters relation holds across every replica (the replay
+        # contract in ``serving/audit.py`` depends on this).
+        self._published: dict[str, QuantileMap] = {}
 
     # ----------------------------------------------------------------- fleet
     def _iter_replicas(self) -> list["object"]:
@@ -539,15 +566,19 @@ class FleetCalibrationController(CalibrationController):
     def align(self, rep: "object") -> int:
         """Fast-forward one (new/surged) replica to the fleet generation.
 
-        An empty fenced publish: no map content changes, but the replica's
-        banks are re-stamped to the current fleet generation so the fenced
-        ``ReplicaSet.dispatch`` can route generation-pinned streams to it
-        immediately.  No-op if the replica is already at or above it.
+        A fenced publish of the plane's RETAINED maps (everything the fleet
+        has ever published, newest per predictor): the replica's banks land
+        on the current fleet generation with the same CONTENT its siblings
+        serve, so the fenced ``ReplicaSet.dispatch`` can route generation-
+        pinned streams to it immediately and a response stamped with
+        generation *g* means the same transform parameters on every
+        replica.  No-op if the replica is already at or above the fleet
+        generation.
         """
         target = self.fleet_generation()
         if rep.server.bank_generation >= target:
             return rep.server.bank_generation
-        return self._publish_to(rep, {}, target)
+        return self._publish_to(rep, dict(self._published), target)
 
     # --------------------------------------------------------------- refresh
     def refresh_fleet(self, only: "set[tuple[str, str]] | None" = None,
@@ -578,10 +609,15 @@ class FleetCalibrationController(CalibrationController):
             for rep in replicas:
                 target = max(target, rep.server.bank_generation)
             target += 1
+            # broadcast the cumulative plane content (retained maps +
+            # this pass's updates): a replica that nacked an earlier pass
+            # heals to full content on its next ack, keeping (generation ->
+            # parameters) fleet-consistent for the audit replay contract.
+            broadcast = {**self._published, **updates}
             for rep in replicas:
                 rid = str(getattr(rep, "replica_id", rep))
                 try:
-                    self._publish_to(rep, updates, target)
+                    self._publish_to(rep, broadcast, target)
                 except Exception as e:  # noqa: BLE001 — straggler/stale
                     nacked.append(rid)
                     reports.append(CandidateReport(
@@ -591,6 +627,7 @@ class FleetCalibrationController(CalibrationController):
                     acked.append(rid)
             if acked:
                 self._fleet_generation = target
+                self._published = broadcast
         publish_s = time.perf_counter() - t0
 
         result = FleetRefreshResult(

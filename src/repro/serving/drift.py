@@ -127,7 +127,9 @@ class CalibrationRefreshController:
     feeds the monitors and ``tick`` applies any due refreshes.
     """
 
-    server: "object"              # MuseServer
+    # MuseServer; may be None when ``fleet`` is set (the fleet plane then
+    # supplies both the Eq.-5 gate and the refresh machinery)
+    server: "object | None"
     ref_quantiles: np.ndarray
     psi_alarm: float = 0.25
     window: int = 20_000
@@ -189,10 +191,28 @@ class CalibrationRefreshController:
             self._cooldown[key] -= 1
             if self._cooldown[key] <= 0:
                 del self._cooldown[key]
-        due = {(t, p): mon.current_psi()
-               for (t, p), mon in self._monitors.items()
-               if mon.drifted() and (t, p) not in self._cooldown
-               and self.server.calibration_ready(t, p)}
+        alarmed = {(t, p): mon.current_psi()
+                   for (t, p), mon in self._monitors.items()
+                   if mon.drifted() and (t, p) not in self._cooldown}
+        if not alarmed:
+            return []
+        if self.fleet is not None:
+            # fleet mode: the Eq.-5 gate must see what the FLEET saw, not
+            # any single replica — replicas come and go across rolling
+            # updates, and each holds only its shard of a tenant's events.
+            # Gate on the merged per-stream estimators (the same view the
+            # refresh itself will fit on); ``server`` may be None here.
+            pol = self.fleet.policy
+            merged = self.fleet.scan()
+            due = {}
+            for key, psi_val in alarmed.items():
+                est = merged.get(key)
+                if est is not None and est.ready(pol.alert_rate,
+                                                 pol.rel_error, pol.z):
+                    due[key] = psi_val
+        else:
+            due = {key: psi_val for key, psi_val in alarmed.items()
+                   if self.server.calibration_ready(*key)}
         if not due:
             return []
         if self.fleet is not None:

@@ -86,13 +86,47 @@ class ReplicaSet:
     above it, so per-stream generation stamps are monotone across the
     whole fleet even while a fleet publish (or a straggler) leaves
     replicas temporarily divergent.
+
+    Stream floors are BOUNDED state: entries idle longer than
+    ``stream_floor_ttl`` seconds are evicted, and when the table exceeds
+    ``max_tracked_streams`` the least-recently-dispatched entries go first.
+    Within the TTL a revived stream keeps its floor (still refuses
+    rollback routing); after it, the stream re-fences from scratch — by
+    then every in-fence replica has long converged past the old floor, so
+    forgetting it is safe, whereas remembering every stream id ever seen
+    is an unbounded leak on a long-lived balancer.
     """
 
-    def __init__(self, replicas: list[Replica]) -> None:
+    def __init__(self, replicas: list[Replica],
+                 *, stream_floor_ttl: float = 3600.0,
+                 max_tracked_streams: int = 100_000,
+                 clock: Callable[[], float] = time.monotonic) -> None:
         self.replicas = replicas
         self._rr = itertools.count()
-        # per-stream generation high-water marks (fenced session routing)
-        self._stream_floor: dict[str, int] = {}
+        self.stream_floor_ttl = stream_floor_ttl
+        self.max_tracked_streams = max_tracked_streams
+        self._clock = clock
+        # per-stream (generation high-water mark, last-dispatch time);
+        # insertion order is LRU order — touches re-insert (dict preserves
+        # insertion order, so the first key is always the coldest stream)
+        self._stream_floor: dict[str, tuple[int, float]] = {}
+
+    # ------------------------------------------------------- floor eviction
+    def _touch_floor(self, stream: str, floor: int) -> None:
+        self._stream_floor.pop(stream, None)
+        self._stream_floor[stream] = (floor, self._clock())
+        self._evict_floors()
+
+    def _evict_floors(self) -> None:
+        now = self._clock()
+        ttl = self.stream_floor_ttl
+        expired = [s for s, (_, seen) in self._stream_floor.items()
+                   if now - seen > ttl]
+        for s in expired:
+            del self._stream_floor[s]
+        while len(self._stream_floor) > self.max_tracked_streams:
+            # LRU: the first key is the least recently dispatched stream
+            self._stream_floor.pop(next(iter(self._stream_floor)))
 
     @property
     def ready_replicas(self) -> list[Replica]:
@@ -118,8 +152,20 @@ class ReplicaSet:
 
     def stream_floor(self, stream: str) -> int:
         """Highest generation the given client stream has observed (-1 if
-        the stream has never dispatched)."""
-        return self._stream_floor.get(stream, -1)
+        the stream has never dispatched, or its floor entry expired)."""
+        entry = self._stream_floor.get(stream)
+        if entry is None:
+            return -1
+        floor, seen = entry
+        if self._clock() - seen > self.stream_floor_ttl:
+            return -1
+        return floor
+
+    def tracked_streams(self) -> int:
+        """Number of stream-floor entries currently held (bounded by
+        ``max_tracked_streams``; TTL-expired entries may still count until
+        the next dispatch sweeps them)."""
+        return len(self._stream_floor)
 
     def dispatch(self, requests: list[ScoringRequest],
                  stream: str | None = None) -> list[ScoringResponse]:
@@ -140,7 +186,7 @@ class ReplicaSet:
         if stream is None:
             replica = ready[next(self._rr) % len(ready)]
             return replica.serve(requests)
-        floor = self._stream_floor.get(stream, -1)
+        floor = self.stream_floor(stream)
         eligible = [r for r in ready if r.bank_generation >= floor]
         if not eligible:
             raise RuntimeError(
@@ -149,8 +195,7 @@ class ReplicaSet:
         replica = eligible[next(self._rr) % len(eligible)]
         responses = replica.serve(requests)
         seen = max((r.bank_generation for r in responses), default=floor)
-        if seen > floor:
-            self._stream_floor[stream] = seen
+        self._touch_floor(stream, max(seen, floor))
         return responses
 
 

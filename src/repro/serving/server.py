@@ -129,6 +129,11 @@ class FeatureStore:
 class ServerConfig:
     track_quantiles: bool = True
     quantile_capacity: int = 131072
+    # newest-samples ring per estimator stream: sized so a "recent"-window
+    # refresh (RefreshPolicy.fit_window) sees roughly the drift timescale
+    # of interest (e.g. ~a day of a tenant's traffic for the adversarial
+    # campaign suite), not the all-time reservoir
+    recent_capacity: int = 4096
     refresh_alert_rate: float = 0.01   # Eq. 5 gating for auto-refresh readiness
     refresh_rel_error: float = 0.2
     # fused tenant-indexed Pallas dispatch; False falls back to the pure-jnp
@@ -309,7 +314,12 @@ class MuseServer:
         self.metrics: dict[str, float] = {
             "requests": 0, "shadow_evals": 0, "kernel_dispatches": 0,
             "model_group_calls": 0, "model_calls": 0, "bank_generation": 0,
-            "shard_dispatches": 0}
+            "shard_dispatches": 0,
+            # uniform-block fast-path coverage of the fused banked kernel:
+            # blocks whose rows all share one tenant skip the one-hot gather
+            # matmuls (see kernels/score_pipeline.py).  uniform/total over
+            # all dense fused dispatches = the serving-side skip rate.
+            "skip_blocks_uniform": 0, "skip_blocks_total": 0}
         # dict `+=` is load/add/store — racy once the engine runs stages on
         # several threads (e.g. two model-group lanes); serialize the bumps
         self._metrics_lock = threading.Lock()
@@ -703,6 +713,14 @@ class MuseServer:
                 jnp.asarray(kraws, jnp.float32), jnp.asarray(kidx),
                 bank.betas, bank.weights,
                 bank.src_quantiles, bank.ref_quantiles)
+            # serving-side skip-rate accounting: banked_skip_stats mirrors
+            # the kernel's own blocking (pow-2 block, edge-padded tail), so
+            # feeding it the UNPADDED tenant vector reports exactly the
+            # uniform-block fast-path coverage this dispatch just got
+            stats = ops.banked_skip_stats(tenant_idx)
+            with self._metrics_lock:
+                self.metrics["skip_blocks_uniform"] += stats["uniform_blocks"]
+                self.metrics["skip_blocks_total"] += stats["blocks"]
         else:
             scores = bank(jnp.asarray(kraws, jnp.float32),
                           jnp.asarray(kidx))
@@ -736,7 +754,8 @@ class MuseServer:
                 if est is None:
                     est = StreamingQuantileEstimator(
                         self.config.quantile_capacity,
-                        seed=zlib.crc32("/".join(key).encode()))
+                        seed=zlib.crc32("/".join(key).encode()),
+                        recent_capacity=self.config.recent_capacity)
                     self._estimators[key] = est
                 est.update(agg[rows])
 

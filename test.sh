@@ -9,6 +9,9 @@
 #   ./test.sh --concurrency  only the threaded reader/writer + engine tests
 #   ./test.sh --sharded      only the multi-device sharded-bank parity campaign
 #   ./test.sh --fleet        only the multi-replica fleet-calibration campaigns
+#   ./test.sh --adversarial  the attack-campaign + audit-trail suite (fast
+#                            subset also rides the default lane; the multi-day
+#                            replay itself is additionally marked slow)
 #   ./test.sh --all          everything (what CI tier-1 runs)
 #   ./test.sh [pytest args...]   extra args forwarded to pytest
 set -euo pipefail
@@ -25,6 +28,7 @@ case "${1:-}" in
   --concurrency) shift; exec python -m pytest -q -m concurrency "$@" ;;
   --sharded)     shift; exec python -m pytest -q -m sharded "$@" ;;
   --fleet)       shift; exec python -m pytest -q -m fleet "$@" ;;
+  --adversarial) shift; exec python -m pytest -q -m adversarial "$@" ;;
   --all)         shift; exec python -m pytest -q "$@" ;;
   *)             exec python -m pytest -q -m "not slow and not concurrency and not sharded and not fleet" "$@" ;;
 esac

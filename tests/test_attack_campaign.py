@@ -1,0 +1,604 @@
+"""Adversarial drift campaign: attack waves, decision loop, audit trail.
+
+The headline scenario (marked ``slow`` + ``adversarial``) is a multi-day
+replay: an :class:`AttackCampaign` drives bursty, tenant-targeted waves of
+fast-drifting malicious traffic through a two-replica fleet while
+``RollingUpdate`` promotions run mid-campaign.  The claim under test is the
+paper's resilience story end-to-end:
+
+  * a STALE transform bank (promotion refits only, fitted on quiet-
+    dominated windows, no drift-triggered refresh) provably blows the
+    per-tenant alert-rate SLO on every attacked tenant;
+  * the drift-ticked closed loop (``CalibrationRefreshController`` routed
+    through the fleet plane, ``RefreshPolicy(fit_window="recent")``) keeps
+    EVERY tenant within ±1.5pp of the target rate over each wave's steady
+    window (wave days after the first — the detection window needs one day
+    of attack traffic to alarm, gate and publish);
+  * every client decision rides a hash-chained audit log whose ``verify``
+    replays each entry bit-for-bit against the exact ``bank_generation``
+    it was served under, across ≥2 promotions — and any single-byte
+    tamper, splice, truncation or generation mismatch is detected.
+
+Fast satellites (default tier-1 lane, also under ``adversarial``): audit
+chain property tests over the hypothesis shim, campaign/world seed-
+determinism regressions, decision-loop grace/cooldown/instant-block
+semantics, ``ReplicaSet`` stream-floor TTL/LRU eviction, and a small
+serve->decide->audit->replay integration pass.
+"""
+import dataclasses
+import itertools
+import json
+import types
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.predictor import PredictorSpec
+from repro.core.routing import Condition, Intent, RoutingTable, ScoringRule
+from repro.core.transforms import QuantileMap
+from repro.experiments.fraud_world import AttackCampaign, AttackWave, FraudWorld
+from repro.serving import (
+    AuditLog,
+    Decision,
+    DecisionLoop,
+    DecisionPolicy,
+    FleetCalibrationController,
+    GenerationLedger,
+    MuseServer,
+    RefreshPolicy,
+    Replica,
+    ReplicaSet,
+    RollingUpdate,
+    ServerConfig,
+    decide,
+)
+from repro.serving.audit import GENESIS, canonical_payload, chain_digest
+from repro.serving.drift import CalibrationRefreshController
+from repro.serving.types import ScoringRequest
+from repro.training.data import TenantProfile
+
+DIM = 8
+ALERT_RATE = 0.05
+SLO_BAND = 0.015                       # ±1.5pp around the target alert rate
+REF = np.linspace(0.0, 1.0, 64)       # uniform reference distribution R
+
+
+# ---------------------------------------------------------------------------
+# Shared fixtures: per-tenant experts aligned with the campaign's fraud
+# directions, so attack waves actually move the score distribution.
+# ---------------------------------------------------------------------------
+
+def _direction_expert(d: np.ndarray):
+    w = np.asarray(d, np.float32)
+
+    def score(x):
+        x = np.asarray(x, np.float32)
+        return jnp.asarray(1.0 / (1.0 + np.exp(-(x @ w))), jnp.float32)
+
+    return score
+
+
+def _factories(campaign: AttackCampaign, tenants: tuple[str, ...]):
+    out = {}
+    for i, t in enumerate(tenants):
+        d = campaign._direction(t)
+        out[f"e{i}"] = (lambda d=d: _direction_expert(d))
+    return out
+
+
+def _campaign_server(campaign, tenants, factories, version="v1") -> MuseServer:
+    rules = tuple(ScoringRule(Condition(tenants=(t,)), f"p{i}")
+                  for i, t in enumerate(tenants)) + \
+        (ScoringRule(Condition(), "p0"),)
+    server = MuseServer(
+        RoutingTable(rules, version=version),
+        ServerConfig(quantile_capacity=8192, recent_capacity=512,
+                     refresh_alert_rate=ALERT_RATE, refresh_rel_error=0.5))
+    for i, t in enumerate(tenants):
+        server.deploy(PredictorSpec(f"p{i}", (f"e{i}",), (0.2,), (1.0,),
+                                    QuantileMap.identity(64)), factories)
+    return server
+
+
+def _requests(features: np.ndarray, tenant: str, rid) -> list[ScoringRequest]:
+    return [ScoringRequest(intent=Intent(tenant=tenant), features=f,
+                           request_id=next(rid)) for f in features]
+
+
+def _decision_record(rng_score, threshold, block_threshold, grace, cooldown,
+                     seq=0, gen=1) -> dict:
+    """A well-formed decision record whose action agrees with ``decide``."""
+    return {
+        "request_id": seq, "tenant": "t0", "predictor": "p0",
+        "score": float(rng_score), "raw_scores": [float(rng_score)],
+        "bank_generation": gen, "threshold": float(threshold),
+        "block_threshold": float(block_threshold),
+        "action": decide(float(rng_score), float(threshold),
+                         float(block_threshold), bool(grace), int(cooldown)),
+        "seq": seq, "grace": bool(grace), "cooldown": int(cooldown),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Audit chain property tests (hypothesis shim)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.adversarial
+class TestAuditChainProperties:
+    @given(st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=1,
+                    max_size=24),
+           st.floats(min_value=0.2, max_value=0.9),
+           st.booleans(), st.integers(min_value=0, max_value=3))
+    @settings(max_examples=12)
+    def test_append_verify_roundtrip(self, scores, threshold, grace, cool):
+        log = AuditLog()
+        for i, s in enumerate(scores):
+            log.append(_decision_record(s, threshold, 0.95, grace, cool,
+                                        seq=i))
+        v = log.verify(expected_head=log.head(), expected_length=len(log))
+        assert v.ok and v.entries == len(scores) and v.head == log.head()
+
+    @given(st.integers(min_value=0, max_value=9),
+           st.integers(min_value=0, max_value=10_000))
+    @settings(max_examples=12)
+    def test_tamper_any_byte_detected(self, entry_idx, byte_pos):
+        log = AuditLog()
+        for i in range(10):
+            log.append(_decision_record(0.1 * i, 0.5, 0.95, False, 0, seq=i))
+        e = log.entries[entry_idx]
+        pos = byte_pos % len(e.payload)
+        flipped = chr((ord(e.payload[pos]) + 1) % 128)
+        payload = e.payload[:pos] + flipped + e.payload[pos + 1:]
+        log.entries[entry_idx] = dataclasses.replace(e, payload=payload)
+        v = log.verify()
+        assert not v.ok
+        assert any(f.kind == "chain" and f.index == entry_idx
+                   for f in v.failures)
+
+    @given(st.integers(min_value=1, max_value=8))
+    @settings(max_examples=8)
+    def test_truncation_detected(self, n_drop):
+        log = AuditLog()
+        for i in range(9):
+            log.append(_decision_record(0.1 * i, 0.5, 0.95, False, 0, seq=i))
+        head, length = log.head(), len(log)
+        del log.entries[-n_drop:]
+        # the remaining chain is internally consistent — only the out-of-
+        # band (head, length) witness catches the amputated tail
+        assert log.verify().ok
+        v = log.verify(expected_head=head, expected_length=length)
+        assert not v.ok
+        assert {f.kind for f in v.failures} == {"truncated", "head_mismatch"}
+
+    @given(st.floats(min_value=0.0, max_value=1.0), st.booleans())
+    @settings(max_examples=8)
+    def test_digest_independent_of_field_order(self, score, grace):
+        record = _decision_record(score, 0.5, 0.95, grace, 0)
+        shuffled = dict(reversed(list(record.items())))
+        assert list(record) != list(shuffled)  # genuinely different order
+        assert canonical_payload(record) == canonical_payload(shuffled)
+        a, b = AuditLog(), AuditLog()
+        a.append(record)
+        b.append(shuffled)
+        assert a.head() == b.head() != GENESIS
+
+    def test_reordered_entries_break_chain(self):
+        log = AuditLog()
+        for i in range(6):
+            log.append(_decision_record(0.1 * i, 0.5, 0.95, False, 0, seq=i))
+        log.entries[2], log.entries[3] = log.entries[3], log.entries[2]
+        v = log.verify()
+        assert not v.ok and any(f.kind in ("chain", "index")
+                                for f in v.failures)
+
+
+# ---------------------------------------------------------------------------
+# Seed determinism regressions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.adversarial
+class TestSeedDeterminism:
+    def test_campaign_streams_and_schedule_bitwise(self):
+        names = ("bankA", "bankB", "bankC")
+        c1 = AttackCampaign.build(names, n_days=8, n_waves=2, seed=11, dim=DIM)
+        c2 = AttackCampaign.build(names, n_days=8, n_waves=2, seed=11, dim=DIM)
+        assert c1.waves == c2.waves
+        assert c1.schedule() == c2.schedule()
+        for t in names:
+            for day in (0, 3, 7):
+                x1, y1 = c1.sample(t, day, 256)
+                x2, y2 = c2.sample(t, day, 256)
+                assert x1.dtype == np.float32
+                assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+        # order independence: drawing other tenant-days first changes nothing
+        c3 = AttackCampaign.build(names, n_days=8, n_waves=2, seed=11, dim=DIM)
+        for t in reversed(names):
+            c3.sample(t, 5, 64)
+        x1, _ = c1.sample("bankA", 3, 256)
+        x3, _ = c3.sample("bankA", 3, 256)
+        assert np.array_equal(x1, x3)
+        # and a different seed genuinely differs
+        c4 = AttackCampaign.build(names, n_days=8, n_waves=2, seed=12, dim=DIM)
+        x4, _ = c4.sample("bankA", 3, 256)
+        assert not np.array_equal(x1, x4)
+
+    def test_fraud_world_experts_bitwise(self):
+        w1 = FraudWorld.build(n_experts=2, betas=(0.18, 0.18), seed=17)
+        w2 = FraudWorld.build(n_experts=2, betas=(0.18, 0.18), seed=17)
+        for name in w1.experts:
+            e1, e2 = w1.experts[name], w2.experts[name]
+            assert np.array_equal(e1.w, e2.w) and e1.b == e2.b
+            assert np.array_equal(e1.feature_mask, e2.feature_mask)
+        assert np.array_equal(w1.ref_quantiles, w2.ref_quantiles)
+        x1, y1 = w1.client.sample(512)
+        x2, y2 = w2.client.sample(512)
+        assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+
+
+# ---------------------------------------------------------------------------
+# Decision-loop semantics
+# ---------------------------------------------------------------------------
+
+def _resp(score: float, rid: int, gen: int = 1):
+    return types.SimpleNamespace(
+        request_id=rid, score=score, predictor="p0", routing_version="v1",
+        latency_ms=0.1, raw_scores=(score,), bank_generation=gen)
+
+
+def _reqs_for(tenant: str, n: int):
+    return [ScoringRequest(intent=Intent(tenant=tenant),
+                           features=np.zeros(DIM, np.float32), request_id=i)
+            for i in range(n)]
+
+
+@pytest.mark.adversarial
+class TestDecisionLoopSemantics:
+    def test_grace_observes_then_alerts(self):
+        loop = DecisionLoop(DecisionPolicy(alert_rate=0.1, block_rate=0.001,
+                                           grace_events=3), REF)
+        reqs = _reqs_for("t0", 5)
+        resps = [_resp(0.95, i) for i in range(5)]  # all above tau, below block
+        actions = [d.action for d in loop.process(reqs, resps)]
+        assert actions == ["allow", "allow", "allow", "alert", "alert"]
+
+    def test_instant_block_outranks_grace(self):
+        loop = DecisionLoop(DecisionPolicy(alert_rate=0.1, block_rate=0.01,
+                                           grace_events=5), REF)
+        reqs = _reqs_for("t0", 2)
+        decisions = loop.process(reqs, [_resp(0.9999, 0), _resp(0.5, 1)])
+        assert decisions[0].action == "block" and decisions[0].grace
+        assert decisions[1].action == "allow"
+
+    def test_cooldown_suppresses_alerts_after_block(self):
+        loop = DecisionLoop(DecisionPolicy(alert_rate=0.1, block_rate=0.01,
+                                           cooldown_events=2), REF)
+        reqs = _reqs_for("t0", 4)
+        scores = [0.9999, 0.95, 0.95, 0.95]   # block, then 3 alert-worthy
+        actions = [d.action for d in
+                   loop.process(reqs, [_resp(s, i)
+                                       for i, s in enumerate(scores)])]
+        assert actions == ["block", "allow", "allow", "alert"]
+        st0 = loop.state("t0")
+        assert st0.blocks == 1 and st0.alerts == 1
+
+    def test_decisions_keyed_by_request_id_and_replayable(self):
+        loop = DecisionLoop(DecisionPolicy(alert_rate=0.1, block_rate=0.001),
+                            REF)
+        reqs = _reqs_for("t0", 3)
+        decisions = loop.process(reqs, [_resp(0.2, 10), _resp(0.97, 11),
+                                        _resp(0.4, 12)])
+        assert [d.request_id for d in decisions] == [10, 11, 12]
+        for d in decisions:   # the recorded state inputs reproduce the action
+            assert decide(d.score, d.threshold, d.block_threshold, d.grace,
+                          d.cooldown) == d.action
+
+
+# ---------------------------------------------------------------------------
+# ReplicaSet stream-floor TTL / LRU eviction
+# ---------------------------------------------------------------------------
+
+class _StubServer:
+    def __init__(self, gen: int) -> None:
+        self.bank_generation = gen
+
+    def score_batch(self, requests):
+        return [types.SimpleNamespace(bank_generation=self.bank_generation,
+                                      request_id=r.request_id)
+                for r in requests]
+
+
+@pytest.mark.adversarial
+class TestStreamFloorEviction:
+    def _set(self, gens, **kw):
+        reps = [Replica(i, _StubServer(g), "v1", ready=True)
+                for i, g in enumerate(gens)]
+        return ReplicaSet(reps, **kw)
+
+    def test_revived_stream_within_ttl_refuses_rollback(self):
+        t = [0.0]
+        rs = self._set([5], stream_floor_ttl=100.0, clock=lambda: t[0])
+        rs.dispatch(_reqs_for("t0", 2), stream="s")
+        assert rs.stream_floor("s") == 5
+        # the up-to-date replica dies; only an older-generation one remains
+        rs.replicas[0] = Replica(1, _StubServer(3), "v1", ready=True)
+        t[0] = 50.0   # revived within TTL: floor remembered, rollback refused
+        with pytest.raises(RuntimeError, match="generation rollback"):
+            rs.dispatch(_reqs_for("t0", 2), stream="s")
+
+    def test_expired_floor_re_fences_from_scratch(self):
+        t = [0.0]
+        rs = self._set([5], stream_floor_ttl=100.0, clock=lambda: t[0])
+        rs.dispatch(_reqs_for("t0", 2), stream="s")
+        rs.replicas[0] = Replica(1, _StubServer(3), "v1", ready=True)
+        t[0] = 101.0  # past the TTL: the stale floor is forgotten
+        assert rs.stream_floor("s") == -1
+        resp = rs.dispatch(_reqs_for("t0", 2), stream="s")
+        assert resp[0].bank_generation == 3
+        assert rs.stream_floor("s") == 3
+
+    def test_ttl_sweep_bounds_the_table(self):
+        t = [0.0]
+        rs = self._set([1], stream_floor_ttl=10.0, clock=lambda: t[0])
+        for i in range(8):
+            rs.dispatch(_reqs_for("t0", 1), stream=f"old{i}")
+        assert rs.tracked_streams() == 8
+        t[0] = 11.0
+        rs.dispatch(_reqs_for("t0", 1), stream="fresh")
+        assert rs.tracked_streams() == 1  # all idle floors swept
+
+    def test_lru_cap_evicts_coldest_stream_first(self):
+        t = [0.0]
+        rs = self._set([1], max_tracked_streams=3, clock=lambda: t[0])
+        for i, s in enumerate(("a", "b", "c")):
+            t[0] = float(i)
+            rs.dispatch(_reqs_for("t0", 1), stream=s)
+        t[0] = 3.0
+        rs.dispatch(_reqs_for("t0", 1), stream="a")  # touch: a is now hottest
+        t[0] = 4.0
+        rs.dispatch(_reqs_for("t0", 1), stream="d")  # evicts b (coldest)
+        assert rs.tracked_streams() == 3
+        assert rs.stream_floor("b") == -1
+        assert rs.stream_floor("a") == 1 and rs.stream_floor("d") == 1
+
+
+# ---------------------------------------------------------------------------
+# Fast serve -> decide -> audit -> replay integration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.adversarial
+class TestAuditReplayIntegration:
+    def _served_log(self):
+        tenants = ("t0",)
+        campaign = AttackCampaign.build(tenants, n_days=2, n_waves=0,
+                                        promotion_days=(), seed=5, dim=DIM)
+        factories = _factories(campaign, tenants)
+        server = _campaign_server(campaign, tenants, factories)
+        audit, ledger = AuditLog(), GenerationLedger()
+        loop = DecisionLoop(DecisionPolicy(alert_rate=0.1, block_rate=0.02,
+                                           grace_events=2, cooldown_events=3),
+                            REF, audit=audit)
+        rid = itertools.count()
+        x, _ = campaign.sample("t0", 0, 48)
+        resps = server.score_batch(_requests(x, "t0", rid))
+        ledger.record_server(server)
+        # a mid-stream publish: entries span TWO generations
+        server.publish_quantile_maps(
+            {"p0": QuantileMap.fit(np.linspace(0, 1, 512),
+                                   jnp.asarray(REF, jnp.float32))})
+        ledger.record_server(server)
+        x2, _ = campaign.sample("t0", 1, 48)
+        resps2 = server.score_batch(_requests(x2, "t0", rid))
+        loop.process(_requests(x, "t0", iter(range(1000, 1048))), resps)
+        loop.process(_requests(x2, "t0", iter(range(2000, 2048))), resps2)
+        return audit, ledger
+
+    def test_two_generation_log_replays_bitwise(self):
+        audit, ledger = self._served_log()
+        assert len(ledger.generations()) == 2
+        v = audit.verify(ledger, expected_head=audit.head(),
+                         expected_length=len(audit))
+        assert v.ok, v.failures
+        assert v.replayed == len(audit) == 96
+
+    def test_score_tamper_caught_by_replay_not_just_chain(self):
+        audit, ledger = self._served_log()
+        # rebuild a log whose entry has a subtly altered score but a VALID
+        # chain (attacker re-hashes): only generation replay catches it
+        fields = json.loads(audit.entries[7].payload)
+        fields["score"] = fields["score"] + 1e-3
+        forged = AuditLog()
+        forged.append(fields)
+        v = forged.verify(ledger)
+        assert not v.ok
+        assert any(f.kind in ("score_mismatch", "action_mismatch")
+                   for f in v.failures)
+
+    def test_generation_mismatch_detected(self):
+        audit, ledger = self._served_log()
+        fields = json.loads(audit.entries[3].payload)
+        fields["bank_generation"] = 999
+        forged = AuditLog()
+        forged.append(fields)
+        v = forged.verify(ledger)
+        assert not v.ok
+        assert any(f.kind == "unknown_generation" for f in v.failures)
+
+    def test_ledger_refuses_conflicting_rerecord(self):
+        _, ledger = self._served_log()
+        gen = max(ledger.generations())
+        betas, weights, src, ref = ledger.params(gen, "p0")
+        with pytest.raises(ValueError, match="ledger conflict"):
+            ledger.record(gen, "p0", betas + 1.0, weights, src, ref)
+
+
+# ---------------------------------------------------------------------------
+# The multi-day adversarial replay campaign (slow)
+# ---------------------------------------------------------------------------
+
+TENANTS = ("t0", "t1", "t2")
+WAVES = (
+    AttackWave(name="wave0", targets=("t0",), start_day=3, duration=3,
+               fraud_multiplier=24.0, separation_scale=0.6,
+               drift_per_day=0.02, boundary_mass=0.25, boundary_scale=0.55),
+    AttackWave(name="wave1", targets=("t1",), start_day=7, duration=3,
+               fraud_multiplier=24.0, separation_scale=0.6,
+               drift_per_day=0.02, boundary_mass=0.3, boundary_scale=0.55),
+)
+N_DAYS = 10
+PROMOTION_DAYS = (2, 6)
+WINDOWS_PER_DAY = 8
+WINDOW = 256
+EVENTS_PER_DAY = WINDOWS_PER_DAY * WINDOW
+
+
+def _build_campaign() -> AttackCampaign:
+    tenants = {t: TenantProfile(t, fraud_rate=0.01,
+                                feature_shift=0.25 + 0.05 * i, seed=900 + i)
+               for i, t in enumerate(TENANTS)}
+    return AttackCampaign(tenants=tenants, waves=WAVES,
+                          promotion_days=PROMOTION_DAYS, n_days=N_DAYS,
+                          dim=DIM, seed=42)
+
+
+def _run_campaign(campaign: AttackCampaign, *, drift_refresh: bool,
+                  audit: AuditLog | None = None,
+                  ledger: GenerationLedger | None = None):
+    """Drive the full scripted schedule; returns (records, fleet, ctrl).
+
+    ``records`` is one (tenant, day, action) triple per served event.  The
+    stale baseline (``drift_refresh=False``) runs the IDENTICAL traffic,
+    promotions and promotion-time refreshes — only the drift-triggered
+    closed loop is absent.
+    """
+    factories = _factories(campaign, TENANTS)
+
+    def make_server():
+        return _campaign_server(campaign, TENANTS, factories)
+
+    reps = [Replica(i, make_server(), "v1", ready=True) for i in range(2)]
+    rs = ReplicaSet(reps)
+    fleet = FleetCalibrationController(
+        rs, REF, RefreshPolicy(alert_rate=ALERT_RATE, rel_error=0.5,
+                               n_levels=64, fit_window="recent"))
+    ctrl = None
+    if drift_refresh:
+        ctrl = CalibrationRefreshController(
+            None, REF, psi_alarm=0.08, window=768, reject_cooldown=2,
+            fleet=fleet)
+    loop = DecisionLoop(DecisionPolicy(alert_rate=ALERT_RATE,
+                                       block_rate=0.001), REF, audit=audit)
+    rid = itertools.count()
+    records: list[tuple[str, int, str]] = []
+    promotions = 0
+
+    for day in range(campaign.n_days):
+        if day in campaign.promotion_days:
+            ru = RollingUpdate(rs, make_server, f"v{day}", schema_dim=DIM,
+                               warmup_batch_sizes=(WINDOW,),
+                               fleet_calibration=fleet)
+            for _ in ru.steps():
+                pass
+            promotions += 1
+            if ledger is not None:
+                ledger.record_replicas(rs)
+        for i, t in enumerate(TENANTS):
+            x, _ = campaign.sample(t, day, EVENTS_PER_DAY)
+            for w in range(WINDOWS_PER_DAY):
+                feats = x[w * WINDOW:(w + 1) * WINDOW]
+                reqs = _requests(feats, t, rid)
+                resps = rs.dispatch(reqs, stream=t)
+                if ledger is not None:
+                    ledger.record_replicas(rs)
+                decisions = loop.process(reqs, resps)
+                records += [(t, day, d.action) for d in decisions]
+                if ctrl is not None:
+                    ctrl.observe(t, resps[0].predictor,
+                                 np.asarray([r.score for r in resps]))
+                    ctrl.tick()
+        if day == 0:
+            # initial calibration once the Eq.-5 gate opens (both runs)
+            fleet.refresh_fleet()
+            if ledger is not None:
+                ledger.record_replicas(rs)
+    assert promotions == len(campaign.promotion_days)
+    return records, fleet, ctrl
+
+
+def _rate(records, tenant: str, days) -> float:
+    evs = [a for (t, d, a) in records if t == tenant and d in days]
+    assert evs, f"no events for {tenant} over {days}"
+    return sum(a != "allow" for a in evs) / len(evs)
+
+
+def _steady_days(wave: AttackWave) -> range:
+    """The wave's SLO measurement window: its days after the first (the
+    closed loop needs ~one day of attack traffic to alarm + gate +
+    publish; the stale baseline has no such excuse and violates here)."""
+    return range(wave.start_day + 1, wave.start_day + wave.duration)
+
+
+@pytest.mark.slow
+@pytest.mark.adversarial
+class TestMultiDayAdversarialReplay:
+    def test_campaign_slo_and_audit_replay(self):
+        campaign = _build_campaign()
+
+        # ---- stale baseline: no drift-triggered refresh ------------------
+        stale_records, _, _ = _run_campaign(campaign, drift_refresh=False)
+        for wave in campaign.waves:
+            for target in wave.targets:
+                rate = _rate(stale_records, target, _steady_days(wave))
+                assert rate > ALERT_RATE + SLO_BAND, (
+                    f"stale bank unexpectedly held SLO on {target} during "
+                    f"{wave.name}: rate={rate:.4f}")
+
+        # ---- drift-ticked run: closed loop + audit trail -----------------
+        audit, ledger = AuditLog(), GenerationLedger()
+        records, fleet, ctrl = _run_campaign(
+            campaign, drift_refresh=True, audit=audit, ledger=ledger)
+        assert len(ctrl.refreshes) >= 2  # at least one refresh per wave
+
+        for wave in campaign.waves:
+            window = _steady_days(wave)
+            for t in TENANTS:
+                rate = _rate(records, t, window)
+                assert abs(rate - ALERT_RATE) <= SLO_BAND, (
+                    f"refreshed run out of SLO for {t} during {wave.name}: "
+                    f"rate={rate:.4f}")
+        # quiet steady state holds too (skip day 0 pre-calibration, days
+        # adjacent to promotions/waves where a refresh is legitimately
+        # still converging)
+        for t in TENANTS:
+            assert abs(_rate(records, t, (1,)) - ALERT_RATE) <= SLO_BAND
+
+        # ---- audit chain verifies + replays end-to-end -------------------
+        assert len(audit) == len(TENANTS) * N_DAYS * EVENTS_PER_DAY
+        assert len(ledger.generations()) >= 3  # initial + promos + drift
+        v = audit.verify(ledger, expected_head=audit.head(),
+                         expected_length=len(audit))
+        assert v.ok, v.failures[:5]
+        assert v.replayed == len(audit)
+
+        # ---- tamper / generation mismatch detection ----------------------
+        e = audit.entries[1234]
+        pos = len(e.payload) // 2
+        tampered = e.payload[:pos] + \
+            chr((ord(e.payload[pos]) + 1) % 128) + e.payload[pos + 1:]
+        audit.entries[1234] = dataclasses.replace(e, payload=tampered)
+        vt = audit.verify()
+        assert not vt.ok and any(f.kind == "chain" and f.index == 1234
+                                 for f in vt.failures)
+        audit.entries[1234] = e
+        assert audit.verify(expected_head=audit.head(),
+                            expected_length=len(audit)).ok
+
+        fields = json.loads(audit.entries[777].payload)
+        fields["bank_generation"] = max(ledger.generations()) + 100
+        forged = AuditLog()
+        forged.append(fields)
+        vg = forged.verify(ledger)
+        assert not vg.ok
+        assert any(f.kind == "unknown_generation" for f in vg.failures)

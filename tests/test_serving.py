@@ -101,6 +101,39 @@ class TestServerDataPlane:
         resp = server.score(_req("bank1"))
         assert 0.0 <= resp.score <= 1.0
 
+    def test_banked_skip_stats_as_serving_metric(self):
+        """skip_blocks_* metrics through the REAL dispatcher path: a window
+        sorted by tenant is all uniform blocks (scalar-prefetch fast path),
+        an interleaved window defeats it entirely."""
+        rules = [ScoringRule(Condition(tenants=("bank1",)), "p-bank1"),
+                 ScoringRule(Condition(), "p-bank2")]
+        factories = {"m1": lambda: _linear_model(1),
+                     "m2": lambda: _linear_model(2)}
+
+        def mk():
+            server = MuseServer(RoutingTable(tuple(rules), version="v1"))
+            # two predictors sharing one model group -> one banked window
+            server.deploy(PredictorSpec("p-bank1", ("m1", "m2"), (0.2, 0.2),
+                                        (1.0, 1.0), _qm()), factories)
+            server.deploy(PredictorSpec("p-bank2", ("m1", "m2"), (0.2, 0.2),
+                                        (1.0, 1.0), _qm()), factories)
+            return server
+
+        n = 2048  # two kernel blocks of 1024
+        sorted_reqs = [_req("bank1", i) for i in range(n // 2)] + \
+            [_req("bank2", i) for i in range(n // 2)]
+        server = mk()
+        server.score_batch(sorted_reqs)
+        assert server.metrics["skip_blocks_total"] == 2
+        assert server.metrics["skip_blocks_uniform"] == 2  # skip rate 1.0
+
+        interleaved = [r for pair in zip(sorted_reqs[: n // 2],
+                                         sorted_reqs[n // 2:]) for r in pair]
+        server = mk()
+        server.score_batch(interleaved)
+        assert server.metrics["skip_blocks_total"] == 2
+        assert server.metrics["skip_blocks_uniform"] == 0  # skip rate 0.0
+
     def test_publish_routing_validates_targets(self):
         server = _basic_server()
         bad = RoutingTable((ScoringRule(Condition(), "ghost"),), version="v2")
