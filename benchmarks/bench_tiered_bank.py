@@ -1,0 +1,217 @@
+"""Tiered tenant-bank store: bounded device residency at 10^3..10^6 tenants.
+
+The tiered topology's three headline claims, measured against the S=8
+sharded dispatch baseline (``BENCH_sharded_bank.json``):
+
+  * **residency** — device-resident bank bytes are
+    ``(hot + victims + 1)·(2K+2N)·4``, CONSTANT across the tenant sweep
+    (the host store grows linearly; the device footprint does not) —
+    the scaling move past the sharded topology's ~1/S shrink;
+  * **throughput** — the hot path (every referenced row in a hot slot:
+    one slot remap + one banked kernel call) must stay within ~10% of
+    the S=8 sharded events/s at the same batch/K/N;
+  * **stalls** — a 95/5 hot/cold mixed workload pages cold rows through
+    the victim cache synchronously (``cold_miss_stalls``); issuing the
+    engine-style ``prefetch`` for the pending window first removes the
+    stalls entirely.
+
+Bitwise f32 parity vs the dense bank is asserted at the smallest tenant
+count before anything is timed.  Emits
+``benchmarks/results/BENCH_tiered_bank.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.transforms import TransformBank
+from repro.kernels import ops
+from repro.serving.tiering import HostBankStore, TieredBankStore, TieringConfig
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results",
+                            "BENCH_tiered_bank.json")
+SHARDED_PATH = os.path.join(os.path.dirname(__file__), "results",
+                            "BENCH_sharded_bank.json")
+
+
+def _timeit(fn, repeat=10):
+    fn()                                   # warm (trace/compile)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return (time.perf_counter() - t0) / repeat
+
+
+def _monotone_rows(rng, t, n) -> np.ndarray:
+    """Sorted-row quantile tables without an O(t·n log n) sort (cumsum of
+    positive increments) — 10^6 rows must build in seconds, not minutes."""
+    inc = rng.uniform(1e-3, 1.0, (t, n)).astype(np.float32)
+    q = np.cumsum(inc, axis=1, dtype=np.float32)
+    return q / q[:, -1:]
+
+
+def _host_store(rng, t, k, n) -> HostBankStore:
+    return HostBankStore(
+        rng.uniform(0.05, 1.0, (t, k)).astype(np.float32),
+        rng.uniform(0.1, 2.0, (t, k)).astype(np.float32),
+        _monotone_rows(rng, t, n),
+        _monotone_rows(rng, t, n))
+
+
+def _stall_rate(store, rng, t, hot_ids, batch, windows, *, prefetch):
+    """Fraction of mixed-workload (95% hot / 5% uniform-cold) events that
+    stalled on a synchronous host->device page-in."""
+    ev0 = store.metrics["events"]
+    st0 = store.metrics["stalled_events"]
+    for _ in range(windows):
+        mix = np.where(rng.random(batch) < 0.95,
+                       rng.choice(hot_ids, batch),
+                       rng.integers(0, t, batch))
+        raws = rng.uniform(0, 1, (batch, 4)).astype(np.float32)
+        if prefetch:
+            store.prefetch(mix)            # the engine's anti-stall hook
+        store.dispatch(raws, mix)
+    ev = store.metrics["events"] - ev0
+    st = store.metrics["stalled_events"] - st0
+    return st / max(ev, 1)
+
+
+def _s8_baseline(rng, k, n, b, repeat) -> tuple[float, str]:
+    """events/s of the S=8 sharded dispatch at the same batch/K/N —
+    from its results file when present, else a dense-kernel fallback
+    (the sharded bench measured S=1 within ~3% of dense on this host)."""
+    if os.path.exists(SHARDED_PATH):
+        with open(SHARDED_PATH) as f:
+            r = json.load(f)
+        if r.get("batch") == b and r.get("experts") == k \
+                and r.get("knots") == n:
+            row = max((x for x in r["rows"] if x["path"] == "sharded"),
+                      key=lambda x: (x["tenants"], x["shards"]))
+            return row["events_per_s"], \
+                f"BENCH_sharded_bank S={row['shards']} t={row['tenants']}"
+    t = 4096
+    bank = TransformBank(
+        betas=jnp.asarray(rng.uniform(0.05, 1.0, (t, k)), jnp.float32),
+        weights=jnp.asarray(rng.uniform(0.1, 2.0, (t, k)), jnp.float32),
+        src_quantiles=jnp.asarray(_monotone_rows(rng, t, n)),
+        ref_quantiles=jnp.asarray(_monotone_rows(rng, t, n)))
+    raws = jnp.asarray(rng.uniform(0, 1, (b, k)), jnp.float32)
+    tid = jnp.asarray(rng.integers(0, t, b), jnp.int32)
+
+    def call():
+        return np.asarray(ops.score_pipeline_banked(
+            raws, tid, bank.betas, bank.weights,
+            bank.src_quantiles, bank.ref_quantiles))
+
+    return b / _timeit(call, repeat), "dense fallback t=4096"
+
+
+def run(quick: bool = False) -> dict:
+    k, n = 4, 256
+    b = 2048 if quick else 8192            # matches BENCH_sharded_bank
+    b_mix = 1024 if quick else 2048        # ~5% cold fits the victim cache
+    tenant_counts = (1_024, 10_000) if quick \
+        else (1_024, 10_000, 100_000, 1_000_000)
+    repeat = 3 if quick else 10
+    windows = 2 if quick else 4
+    # hot + victims + prior = 512 device rows = 1,064,960 bytes — byte-for-
+    # byte the S=8 baseline's per-shard residency at 4096 tenants, so the
+    # throughput comparison is apples-to-apples (the banked kernel's
+    # one-hot gather cost scales with device-table rows)
+    hot_cap, victim_cap = 384, 127
+    cfg = TieringConfig(hot_capacity=hot_cap, victim_capacity=victim_cap)
+    rng = np.random.default_rng(0)
+
+    # -- bitwise parity vs the dense bank (smallest sweep point, cold path)
+    t0 = tenant_counts[0]
+    host = _host_store(rng, t0, k, n)
+    store = TieredBankStore(host, cfg)
+    raws = rng.uniform(0, 1, (1024, k)).astype(np.float32)
+    tid = rng.integers(0, t0, 1024)
+    got, _ = store.dispatch(raws, tid)
+    dense = host.dense_bank(0)
+    want = np.asarray(ops.score_pipeline_banked(
+        jnp.asarray(raws), jnp.asarray(tid, jnp.int32), dense.betas,
+        dense.weights, dense.src_quantiles, dense.ref_quantiles))
+    parity = bool(np.array_equal(got.view(np.uint32), want.view(np.uint32)))
+
+    base_eps, base_src = _s8_baseline(rng, k, n, b, repeat)
+
+    rows: list[dict] = []
+    for t in tenant_counts:
+        host = _host_store(rng, t, k, n)
+        store = TieredBankStore(host, cfg)
+        hot_ids = np.arange(min(hot_cap, t))
+        store.tracker.record(hot_ids)      # declare the hot working set
+        store.rebalance()                  # ... and promote it
+        assert len(store.hot_rows()) == len(hot_ids)
+
+        raws = rng.uniform(0, 1, (b, k)).astype(np.float32)
+        tid_hot = rng.choice(hot_ids, b)
+        hot_s = _timeit(lambda: store.dispatch(raws, tid_hot), repeat)
+        assert store.metrics["cold_miss_stalls"] == 0  # pure hot path
+
+        srate = _stall_rate(store, rng, t, hot_ids, b_mix, windows,
+                            prefetch=False)
+        store.rebalance()                  # re-pin the hot set
+        prate = _stall_rate(store, rng, t, hot_ids, b_mix, windows,
+                            prefetch=True)
+        rows.append({
+            "tenants": t,
+            "device_bytes": store.device_bytes,
+            "host_bytes": store.host_bytes,
+            "us_per_batch_hot": hot_s * 1e6,
+            "events_per_s_hot": b / hot_s,
+            "stall_rate_mixed": srate,
+            "stall_rate_prefetched": prate,
+        })
+
+    t_max = tenant_counts[-1]
+    last = rows[-1]
+    result = {
+        "batch": b, "experts": k, "knots": n,
+        "hot_capacity": hot_cap, "victim_capacity": victim_cap,
+        "tenant_counts": list(tenant_counts),
+        "rows": rows,
+        "max_tenants": t_max,
+        "device_bytes": last["device_bytes"],
+        "device_bytes_bounded": len({r["device_bytes"] for r in rows}) == 1,
+        "host_bytes_at_max": last["host_bytes"],
+        "us_per_batch_hot_at_max": last["us_per_batch_hot"],
+        "events_per_s_hot_at_max": last["events_per_s_hot"],
+        "baseline_events_per_s_s8": base_eps,
+        "baseline_source": base_src,
+        "hot_vs_s8_ratio": last["events_per_s_hot"] / base_eps,
+        "stall_rate_mixed_at_max": last["stall_rate_mixed"],
+        "stall_rate_prefetched_at_max": last["stall_rate_prefetched"],
+        "bitwise_parity": parity,
+    }
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    r = run()
+    print(f"# wrote {RESULTS_PATH}")
+    print(f"{'tenants':>9} {'device_kb':>10} {'host_mb':>9} "
+          f"{'us/batch':>10} {'hot_ev/s':>10} {'stall%':>8} {'pf_stall%':>10}")
+    for row in r["rows"]:
+        print(f"{row['tenants']:>9} {row['device_bytes'] / 1024:>10.1f} "
+              f"{row['host_bytes'] / 2**20:>9.1f} "
+              f"{row['us_per_batch_hot']:>10.1f} "
+              f"{row['events_per_s_hot']:>10.0f} "
+              f"{row['stall_rate_mixed'] * 100:>8.2f} "
+              f"{row['stall_rate_prefetched'] * 100:>10.2f}")
+    print(f"# device bytes bounded: {r['device_bytes_bounded']}; "
+          f"hot/s8 throughput ratio: {r['hot_vs_s8_ratio']:.2f}x "
+          f"({r['baseline_source']}); bitwise_parity={r['bitwise_parity']}")
+
+
+if __name__ == "__main__":
+    main()

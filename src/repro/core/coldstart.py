@@ -20,20 +20,33 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
-from scipy import optimize, stats
 
 from repro.core.transforms import QuantileMap
 
 import jax.numpy as jnp
 
+# scipy is an OFFLINE-fitting dependency only: serving-only deployments (and
+# the tier-1 test lane) import this module for BetaMixtureFit / the fitted
+# prior's quantiles — pure numpy — without ever touching the DE optimizer.
+# The import is therefore lazy, guarded inside the functions that fit or
+# evaluate the mixture densities.
+
+
+def _scipy_stats():
+    from scipy import stats  # lazy: offline fitting path only
+
+    return stats
+
 
 def beta_mixture_pdf(y: np.ndarray, w: float, a0: float, b0: float,
                      a1: float, b1: float) -> np.ndarray:
+    stats = _scipy_stats()
     return (1.0 - w) * stats.beta.pdf(y, a0, b0) + w * stats.beta.pdf(y, a1, b1)
 
 
 def beta_mixture_cdf(y: np.ndarray, w: float, a0: float, b0: float,
                      a1: float, b1: float) -> np.ndarray:
+    stats = _scipy_stats()
     return (1.0 - w) * stats.beta.cdf(y, a0, b0) + w * stats.beta.cdf(y, a1, b1)
 
 
@@ -115,6 +128,8 @@ def fit_beta_mixture(
     ``fraud_prior`` is w = P(y=1) on the combined training data; the two Beta
     components approximate the class-conditional densities.
     """
+    from scipy import optimize  # lazy: offline fitting path only
+
     y = np.clip(np.asarray(train_scores, dtype=np.float64).ravel(), 1e-6, 1 - 1e-6)
     emp_moments = np.array([np.mean(y**r) for r in range(1, 5)])
     hist, edges = np.histogram(y, bins=n_bins, range=(0.0, 1.0), density=True)

@@ -236,6 +236,34 @@ def score_pipeline(
     return quantile_map(agg, src_quantiles, ref_quantiles)
 
 
+def pad_quantile_tables(
+    value: "QuantileMap | tuple[Array, Array]", n: int, *, row: int | None = None,
+) -> tuple[Array, Array]:
+    """Normalize one replacement T^Q table pair to exactly ``n`` knots.
+
+    ``value`` is a :class:`QuantileMap` or a raw ``(src, ref)`` pair.  Tables
+    narrower than ``n`` are edge-padded: the extra flat segments are
+    degenerate (guarded denominator in :func:`quantile_map`) and values past
+    the true support already clip to the reference edge, so padding is
+    semantics-preserving.  Wider tables are a shape error.  Shared by both
+    bank ``with_rows`` scatters and the tiered store's host-row writes
+    (``serving/tiering.py``), which must pad identically for the tiered
+    path to stay bitwise-equal to a dense bank built from the same rows.
+    """
+    src, ref = (value.src_quantiles, value.ref_quantiles) \
+        if isinstance(value, QuantileMap) else value
+    src = jnp.asarray(src, jnp.float32)
+    ref = jnp.asarray(ref, jnp.float32)
+    pad = n - src.shape[-1]
+    if pad < 0:
+        where = f"row {row}: " if row is not None else ""
+        raise ValueError(f"{where}{src.shape[-1]} knots > bank's {n}")
+    if pad:
+        src = jnp.pad(src, (0, pad), mode="edge")
+        ref = jnp.pad(ref, (0, pad), mode="edge")
+    return src, ref
+
+
 # ---------------------------------------------------------------------------
 # Tenant-indexed transform bank (mixed-tenant batched Eq. 2)
 # ---------------------------------------------------------------------------
@@ -318,17 +346,7 @@ class TransformBank:
         for row, value in sorted(rows.items()):
             if not 0 <= row < self.num_rows:
                 raise IndexError(f"row {row} outside bank of {self.num_rows}")
-            src, ref = (value.src_quantiles, value.ref_quantiles) \
-                if isinstance(value, QuantileMap) else value
-            src = jnp.asarray(src, jnp.float32)
-            ref = jnp.asarray(ref, jnp.float32)
-            pad = n - src.shape[-1]
-            if pad < 0:
-                raise ValueError(
-                    f"row {row}: {src.shape[-1]} knots > bank's {n}")
-            if pad:
-                src = jnp.pad(src, (0, pad), mode="edge")
-                ref = jnp.pad(ref, (0, pad), mode="edge")
+            src, ref = pad_quantile_tables(value, n, row=row)
             idx.append(row)
             srcs.append(src)
             refs.append(ref)
@@ -556,17 +574,7 @@ class ShardedTransformBank:
         for row, value in sorted(rows.items()):
             if not 0 <= row < self.num_rows:
                 raise IndexError(f"row {row} outside bank of {self.num_rows}")
-            src, ref = (value.src_quantiles, value.ref_quantiles) \
-                if isinstance(value, QuantileMap) else value
-            src = jnp.asarray(src, jnp.float32)
-            ref = jnp.asarray(ref, jnp.float32)
-            pad = n - src.shape[-1]
-            if pad < 0:
-                raise ValueError(
-                    f"row {row}: {src.shape[-1]} knots > bank's {n}")
-            if pad:
-                src = jnp.pad(src, (0, pad), mode="edge")
-                ref = jnp.pad(ref, (0, pad), mode="edge")
+            src, ref = pad_quantile_tables(value, n, row=row)
             s_idx.append(int(self.shard_of[row]))
             l_idx.append(int(self.local_of[row]))
             srcs.append(src)

@@ -67,6 +67,26 @@ shard) inside the SAME single control-plane swap.  Generations therefore
 stay fleet-monotone across shards — a window can never observe shard A at
 generation g and shard B at g+1.
 
+Tiered serving topology
+-----------------------
+
+``ServerConfig(tiering=TieringConfig(...))`` bounds DEVICE residency by
+configuration instead of tenant count (the move past ~10^5 tenants on one
+replica): the hottest tenants' bank rows live in a device bank, everything
+else pages on demand from a host-memory :class:`HostBankStore` through a
+bounded victim cache, and tenants that have not yet passed the Eq.-5
+sample-size gate score through ONE shared Beta-mixture cold-start prior
+row (``core/coldstart.py``).  The async engine prefetches pending windows'
+cold rows before their transform stage dispatches
+(``MuseServer.prefetch_transforms``), promotion/demotion is an explicit
+generation-fenced control op (``TieredBankStore.rebalance``, driven by the
+calibration controllers after each publish), and
+``publish_quantile_maps`` lands refreshed maps in host rows AND every
+device-resident copy atomically under one generation — hot, cold, and
+freshly promoted tenants all serve the new parameters after the publish
+returns.  Scores match a dense bank bitwise on f32 (same banked kernel,
+slot-remapped rows).  See ``serving/tiering.py``.
+
 Client decision loop + audit trail
 ----------------------------------
 
@@ -119,6 +139,12 @@ from repro.serving.server import (
     StaleGenerationError,
 )
 from repro.serving.shadow import ShadowSink
+from repro.serving.tiering import (
+    HostBankStore,
+    TieredBankStore,
+    TieringConfig,
+    prior_bank_row,
+)
 from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
 
 __all__ = [
@@ -128,7 +154,8 @@ __all__ = [
     "Decision", "DecisionLoop", "DecisionPolicy", "decide",
     "FleetCalibrationController", "FleetGenerationAudit", "FleetRefreshResult",
     "GenerationLedger", "RefreshPolicy", "RefreshResult", "ReplicaPullFailure",
-    "FeatureStore", "MuseServer", "ServerConfig", "ShardedBankDispatcher",
-    "StaleGenerationError", "ShadowSink", "ScoringRequest", "ScoringResponse",
-    "ShadowRecord",
+    "FeatureStore", "HostBankStore", "MuseServer", "ServerConfig",
+    "ShardedBankDispatcher", "StaleGenerationError", "ShadowSink",
+    "ScoringRequest", "ScoringResponse", "ShadowRecord", "TieredBankStore",
+    "TieringConfig", "prior_bank_row",
 ]

@@ -61,6 +61,18 @@ class MicroBatcher:
     def pending_for(self, key: str) -> int:
         return len(self._pending.get(key, ()))
 
+    def pending_keys(self) -> list[str]:
+        """Keys with a non-empty accumulating window (snapshot)."""
+        return [k for k, v in self._pending.items() if v]
+
+    def peek(self, key: str) -> list[ScoringRequest]:
+        """Copy of one key's accumulating window WITHOUT flushing it.
+
+        The async engine's prefetch pass reads pending window contents to
+        stage cold tenant-bank rows before the window dispatches; peeking
+        must not consume the window or touch its age clock."""
+        return list(self._pending.get(key, ()))
+
     def take(self, key: str, n: int | None = None) -> list[ScoringRequest]:
         """Flush one key's pending window, or its first ``n`` requests.
 

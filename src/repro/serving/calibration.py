@@ -412,6 +412,14 @@ class CalibrationController:
         t0 = time.perf_counter()
         generation = self.server.publish_quantile_maps(updates) \
             if updates else self.server.bank_generation
+        if updates:
+            # tiered topology: a publish may have just admitted tenants past
+            # the Eq.-5 gate (their first calibrated map landed) — run one
+            # promotion pass so they get real hot/victim slots instead of
+            # paging on their next window.  No-op on non-tiered servers.
+            rebalance = getattr(self.server, "rebalance_tiers", None)
+            if rebalance is not None:
+                rebalance()
         publish_s = time.perf_counter() - t0
 
         result = RefreshResult(
@@ -625,6 +633,14 @@ class FleetCalibrationController(CalibrationController):
                         reasons=(f"publish:{type(e).__name__}",)))
                 else:
                     acked.append(rid)
+                    # tiered replicas: promote freshly admitted tenants now
+                    # that the fenced broadcast landed on this replica
+                    rebalance = getattr(rep.server, "rebalance_tiers", None)
+                    if rebalance is not None:
+                        try:
+                            rebalance()
+                        except Exception:  # noqa: BLE001 — best-effort
+                            pass
             if acked:
                 self._fleet_generation = target
                 self._published = broadcast

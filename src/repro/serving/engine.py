@@ -143,6 +143,11 @@ class AsyncDispatchEngine:
         self._running = False
         self._closed = False
         self._poll_timer: threading.Timer | None = None
+        # tiered-store anti-stall prefetch (serving/tiering.py): servers
+        # that page cold bank rows from host memory expose
+        # ``prefetch_transforms``; the engine stages pending windows' rows
+        # into the victim cache before their transform stage dispatches
+        self._prefetchable = bool(getattr(server, "prefetch_enabled", False))
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -269,11 +274,32 @@ class AsyncDispatchEngine:
         """Flush aged-out windows into the pipeline; returns windows launched.
 
         Safe to call manually, but ``start()`` makes it self-scheduling."""
+        pending_names: list[list[str]] = []
         with self._lock:
             n = 0
             for key, batch in self.batcher.expired():
                 self._launch_locked(self._build_window(key, batch))
                 n += 1
+            if self._prefetchable:
+                # still-accumulating windows: collect their live predictor
+                # names under the lock, prefetch OUTSIDE it (a host->device
+                # row copy must not block submitters)
+                for key in self.batcher.pending_keys():
+                    names = []
+                    for req in self.batcher.peek(key):
+                        meta = self._meta.get(id(req))
+                        if meta:
+                            names.append(meta[0][1].live)
+                    if names:
+                        pending_names.append(names)
+        for names in pending_names:
+            try:
+                # create=False: speculative pending contents only warm
+                # stores that already exist (a window may never dispatch
+                # with exactly this predictor subset)
+                self.server.prefetch_transforms(names, create=False)
+            except Exception:  # noqa: BLE001 — prefetch must never kill poll
+                pass
         return n
 
     def flush(self) -> int:
@@ -429,6 +455,16 @@ class AsyncDispatchEngine:
             for s_idxs, s_names in win.shadow_jobs:
                 win.shadow_raws.append(self.server.run_models(
                     win.requests, s_idxs, s_names, win.raw_cache, plane))
+            if self._prefetchable:
+                # this window's transform stage is next: stage its cold bank
+                # rows NOW, overlapped with the previous window's kernel
+                # (create=True — the names-tuple is exactly what the
+                # transform stage will dispatch with)
+                try:
+                    self.server.prefetch_transforms(
+                        win.pred_names, plane, create=True)
+                except Exception:  # noqa: BLE001 — best-effort warm-up
+                    pass
         except BaseException as e:  # noqa: BLE001 — deliver via futures
             win.error = e
         self._transforms.submit(self._transform_stage, win)

@@ -283,6 +283,13 @@ class RollingUpdate:
             warmup_mod.warm_up(new.server, self.schema_dim,
                                batch_sizes=self.warmup_batch_sizes)
             new.warmup_seconds = time.perf_counter() - t0
+            # tiered topology: a surged replica starts with EMPTY tiers (the
+            # warm-up calls predictors directly, never the banked path) —
+            # adopt the victim replica's hotness/admission state so the new
+            # replica's first windows hit a promoted hot set instead of
+            # paging its whole working set through the victim cache.
+            if hasattr(new.server, "warm_tiers_from"):
+                new.server.warm_tiers_from(victim.server)
             if self.fleet_calibration is not None:
                 # generation-align the fresh replica BEFORE it takes traffic:
                 # an empty fenced publish fast-forwards its banks to the

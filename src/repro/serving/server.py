@@ -75,24 +75,18 @@ from repro.core.transforms import (
 )
 from repro.kernels import ops
 from repro.serving.shadow import ShadowSink
-from repro.serving.types import ScoringRequest, ScoringResponse, ShadowRecord
+from repro.serving.tiering import HostBankStore, TieredBankStore, TieringConfig
+from repro.serving.types import (
+    ScoringRequest,
+    ScoringResponse,
+    ShadowRecord,
+    StaleGenerationError,
+)
 
-
-class StaleGenerationError(RuntimeError):
-    """A fenced publish arrived with a generation ≤ the one already served.
-
-    The fleet publish protocol stamps every broadcast with the fleet's
-    target generation; a replica that already serves an equal-or-newer
-    generation MUST reject the publish (a late ack from a superseded fleet
-    pass can otherwise roll a replica's transformations backwards).
-    """
-
-    def __init__(self, requested: int, current: int) -> None:
-        super().__init__(
-            f"fenced publish at generation {requested} rejected: replica "
-            f"already serves generation {current}")
-        self.requested = requested
-        self.current = current
+__all__ = [
+    "FeatureStore", "MuseServer", "ServerConfig", "ShardedBankDispatcher",
+    "StaleGenerationError",  # canonical home is serving/types.py
+]
 
 
 class FeatureStore:
@@ -143,6 +137,11 @@ class ServerConfig:
     # (1 = dense single-replica banks, the default).  Requires >= S jax
     # devices; see the module docstring's "Sharded serving topology".
     tenant_shards: int = 1
+    # tiered tenant-bank store (serving/tiering.py): hot rows on device,
+    # cold rows host-paged through a bounded victim cache, un-gated tenants
+    # through the cold-start prior.  None = fully device-resident banks.
+    # Mutually exclusive with tenant_shards > 1.
+    tiering: TieringConfig | None = None
 
 
 def _shape_bucket(n: int) -> int:
@@ -166,11 +165,34 @@ class _BankEntry:
     published under (see :class:`~repro.core.transforms.TransformBank`).
     ``sharded`` is the row-partitioned view served when
     ``ServerConfig.tenant_shards > 1`` — always built/updated alongside the
-    dense bank in the SAME control-plane swap, so their generations agree."""
+    dense bank in the SAME control-plane swap, so their generations agree.
+    ``tiered`` is the hot/victim/prior tiered store served when
+    ``ServerConfig.tiering`` is set; it replaces the dense bank entirely
+    (``bank`` is None) so device residency stays bounded by the configured
+    hot-tier capacity instead of the group's tenant count."""
 
     pipelines: tuple[Any, ...]
-    bank: TransformBank
+    bank: TransformBank | None
     sharded: ShardedTransformBank | None = None
+    tiered: TieredBankStore | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class _TieredWindowBank:
+    """The per-window 'bank' a tiered dispatch hands downstream stages.
+
+    A :class:`TieredBankStore` is mutable (a publish can land right after a
+    window scores), so ``apply_transforms`` wraps the store with the
+    generation the window ACTUALLY scored under — ``build_responses`` reads
+    a dispatch-time provenance stamp, exactly like the immutable dense
+    bank's, and ``track`` fits estimators through the same rows the window
+    served."""
+
+    store: TieredBankStore
+    generation: int
+
+    def pre_quantile(self, expert_scores, tenant_idx):
+        return self.store.pre_quantile(expert_scores, tenant_idx)
 
 
 class ShardedBankDispatcher:
@@ -307,14 +329,27 @@ class MuseServer:
         # sharded topology: one mesh + dispatcher per server when configured
         self._sharded_dispatch: ShardedBankDispatcher | None = None
         if self.config.tenant_shards > 1:
+            if self.config.tiering is not None:
+                raise ValueError(
+                    "tiering and tenant_shards > 1 are mutually exclusive: "
+                    "the tiered store bounds device residency on ONE "
+                    "replica; shard OR tier a bank, not both")
             from repro.launch.mesh import make_tenant_mesh
             self._sharded_dispatch = ShardedBankDispatcher(
                 make_tenant_mesh(self.config.tenant_shards),
                 fused=self.config.fused_kernel)
+        # tiered topology: stateful stores OUTSIDE the plane (hotness, seen
+        # counts and victim-cache residency survive plane swaps); the plane's
+        # bank entries hold references, _tier_lock guards the dict itself
+        self._tiered_stores: dict[tuple[str, ...], TieredBankStore] = {}
+        self._tier_lock = threading.Lock()
+        # predictors routed through the cold-start prior until their stream
+        # re-passes the Eq.-5 gate (applied to stores built later, too)
+        self._cold_names: set[str] = set()
         self.metrics: dict[str, float] = {
             "requests": 0, "shadow_evals": 0, "kernel_dispatches": 0,
             "model_group_calls": 0, "model_calls": 0, "bank_generation": 0,
-            "shard_dispatches": 0,
+            "shard_dispatches": 0, "tier_dispatches": 0,
             # uniform-block fast-path coverage of the fused banked kernel:
             # blocks whose rows all share one tenant skip the one-hot gather
             # matmuls (see kernels/score_pipeline.py).  uniform/total over
@@ -397,6 +432,12 @@ class MuseServer:
         # the dead model's stream would publish a miscalibrated map
         self._estimators = {k: v for k, v in self._estimators.items()
                             if k[1] != name}
+        # tiered stores holding the dead predictor's host row die with it
+        # (row indices are positions in the names tuple — unpatchable)
+        with self._tier_lock:
+            self._tiered_stores = {k: v for k, v in self._tiered_stores.items()
+                                   if name not in k}
+        self._cold_names.discard(name)
 
     def publish_routing(self, table: RoutingTable) -> None:
         """Atomic routing swap — the transparent model switching primitive."""
@@ -464,6 +505,32 @@ class MuseServer:
         # a bank-cache entry mid-iteration (the copy itself is GIL-atomic)
         for key, entry in dict(plane.banks).items():
             touched = {i: updates[n] for i, n in enumerate(key) if n in updates}
+            if entry.tiered is not None:
+                store = entry.tiered
+                entry_fresh = len(entry.pipelines) == len(key) and all(
+                    ep is plane.predictors[n].pipeline
+                    for ep, n in zip(entry.pipelines, key))
+                if not entry_fresh:
+                    # host rows came from a dead pipeline — drop the entry;
+                    # the next dispatch rebuilds the store from the live
+                    # pipelines (re-adopting its hotness state)
+                    continue
+                try:
+                    if touched:
+                        # publish into BOTH tiers in ONE locked store op:
+                        # host rows rewritten + every device-resident copy
+                        # (hot or victim) scattered under the new generation
+                        store.apply_updates(touched, generation=gen)
+                    elif generation is not None:
+                        # fenced publish: fast-forward untouched stores so
+                        # later provenance stamps stay fleet-monotone
+                        store.apply_updates({}, generation=gen)
+                except ValueError:
+                    continue  # a table wider than the store: rebuild lazily
+                pipelines = tuple(new_predictors[n].pipeline for n in key)
+                store.source_pipelines = pipelines
+                new_banks[key] = _BankEntry(pipelines, None, tiered=store)
+                continue
             if not touched:
                 if generation is None:
                     new_banks[key] = entry
@@ -589,6 +656,11 @@ class MuseServer:
         if cached is not None and len(cached.pipelines) == len(pipelines) \
                 and all(a is b for a, b in zip(cached.pipelines, pipelines)):
             return cached
+        if self.config.tiering is not None:
+            entry = _BankEntry(pipelines, None,
+                               tiered=self._tiered_store_for(names, pipelines))
+            plane.banks[names] = entry
+            return entry
         bank = TransformBank.from_params(
             [(p.betas, p.weights, p.src_quantiles, p.ref_quantiles)
              for p in pipelines], generation=plane.generation)
@@ -599,6 +671,38 @@ class MuseServer:
         entry = _BankEntry(pipelines, bank, sharded)
         plane.banks[names] = entry
         return entry
+
+    def _tiered_store_for(self, names: tuple[str, ...],
+                          pipelines: tuple[Any, ...]) -> TieredBankStore:
+        """Fetch (or build) the stateful tiered store for a model group.
+
+        Stores live OUTSIDE the control plane so hotness/admission state
+        survives plane swaps; ``source_pipelines`` is the same identity
+        witness the bank cache uses, so a redeploy-stale store is rebuilt
+        from the live pipelines here — adopting the old store's hotness so
+        the hot set carries over."""
+        with self._tier_lock:
+            store = self._tiered_stores.get(names)
+            if store is not None \
+                    and store.source_pipelines is not None \
+                    and len(store.source_pipelines) == len(pipelines) \
+                    and all(a is b for a, b in
+                            zip(store.source_pipelines, pipelines)):
+                return store
+            host = HostBankStore.from_rows(
+                [(p.betas, p.weights, p.src_quantiles, p.ref_quantiles)
+                 for p in pipelines])
+            fresh = TieredBankStore(host, self.config.tiering,
+                                    generation=self._plane.generation)
+            fresh.source_pipelines = pipelines
+            if store is not None:
+                fresh.adopt_hotness(store.hotness_snapshot())
+            cold = [i for i, n in enumerate(names) if n in self._cold_names]
+            if cold:
+                fresh.mark_cold(cold)
+            fresh.rebalance()
+            self._tiered_stores[names] = fresh
+            return fresh
 
     def score(self, request: ScoringRequest) -> ScoringResponse:
         return self.score_batch([request])[0]
@@ -673,7 +777,7 @@ class MuseServer:
 
     def apply_transforms(self, raws: np.ndarray, pred_names: list[str],
                          plane: _ControlPlane | None = None
-                         ) -> tuple[np.ndarray, TransformBank, np.ndarray]:
+                         ) -> tuple[np.ndarray, Any, np.ndarray]:
         """Stage 2: the whole window through ONE banked T^C/A/T^Q kernel call.
 
         The bank is resolved from the stage-time ``plane`` snapshot — a
@@ -686,9 +790,17 @@ class MuseServer:
         plane = self._plane if plane is None else plane
         bank_names = tuple(sorted(set(pred_names)))  # canonical cache key
         entry = self._bank_for(bank_names, plane)
-        bank = entry.bank
         row_of = {n: r for r, n in enumerate(bank_names)}
         tenant_idx = np.asarray([row_of[n] for n in pred_names], np.int32)
+        if entry.tiered is not None:
+            # tiered topology: slot-remapped banked dispatch against the
+            # bounded device view; cold rows stage through the victim cache
+            # (normally prefetched by the engine before this stage runs)
+            scores, gen = entry.tiered.dispatch(raws, tenant_idx)
+            self.bump_metric("kernel_dispatches")
+            self.bump_metric("tier_dispatches")
+            return scores, _TieredWindowBank(entry.tiered, gen), tenant_idx
+        bank = entry.bank
         b = len(tenant_idx)
         if entry.sharded is not None and self._sharded_dispatch is not None:
             # sharded topology: bucket by owning shard, one shard_map launch
@@ -930,3 +1042,95 @@ class MuseServer:
             src_quantiles=jnp.asarray(src, jnp.float32),
             ref_quantiles=jnp.asarray(np.asarray(ref_quantiles), jnp.float32),
         )
+
+    # ----------------------------------------------------- tiering control
+    @property
+    def prefetch_enabled(self) -> bool:
+        """Whether the engine should prefetch pending windows' bank rows
+        (true only under a tiered topology — prefetch is a no-op and pure
+        overhead against fully-resident banks)."""
+        return self.config.tiering is not None
+
+    def tiered_stores(self) -> dict[tuple[str, ...], TieredBankStore]:
+        """Snapshot of the live model-group -> tiered-store map."""
+        with self._tier_lock:
+            return dict(self._tiered_stores)
+
+    def prefetch_transforms(self, pred_names, plane: Any = None, *,
+                            create: bool = False) -> int:
+        """Stage a pending window's cold bank rows into the victim cache
+        BEFORE its transform stage dispatches (the engine's anti-stall
+        hook).  ``create=False`` (the poll path) only touches stores that
+        already exist — speculative window contents must not build a
+        heavyweight store for a predictor subset that may never dispatch;
+        the model stage passes ``create=True`` because ITS names-tuple is
+        exactly what the transform stage will use.  Returns rows staged."""
+        if self.config.tiering is None or not pred_names:
+            return 0
+        plane = self._plane if plane is None else plane
+        names = tuple(sorted(set(pred_names)))
+        if create:
+            if any(n not in plane.predictors for n in names):
+                return 0
+            store = self._bank_for(names, plane).tiered
+        else:
+            with self._tier_lock:
+                store = self._tiered_stores.get(names)
+        if store is None:
+            return 0
+        row_of = {n: r for r, n in enumerate(names)}
+        return store.prefetch(
+            np.asarray([row_of[n] for n in pred_names], np.int64))
+
+    def rebalance_tiers(self) -> dict[str, dict]:
+        """Run one promotion/demotion/admission pass on every tiered store
+        (the calibration controllers call this right after a publish so
+        newly admitted tenants get real slots).  Returns per-group stats."""
+        return {"+".join(k): s.rebalance()
+                for k, s in self.tiered_stores().items()}
+
+    def mark_cold_tenants(self, names) -> None:
+        """Route these predictors through the cold-start prior until their
+        streams re-pass the Eq.-5 gate (new-tenant onboarding: scores come
+        from the fitted Beta-mixture default T^Q, not an uncalibrated row).
+        Applies to live stores now and to stores built later."""
+        names = set(names)
+        self._cold_names |= names
+        for key, store in self.tiered_stores().items():
+            rows = [i for i, n in enumerate(key) if n in names]
+            if rows:
+                store.mark_cold(rows)
+
+    def warm_tiers_from(self, other: Any) -> int:
+        """Adopt a predecessor replica's hotness/admission state (rollout
+        surge): for every model group the old replica served, build this
+        replica's store, adopt the old hot statistics, and promote — the
+        surged replica starts with a warm hot tier instead of paging its
+        entire working set through the victim cache.  Returns the number
+        of stores warmed."""
+        if self.config.tiering is None:
+            return 0
+        source = getattr(other, "tiered_stores", None)
+        if source is None:
+            return 0
+        plane = self._plane
+        warmed = 0
+        for names, theirs in source().items():
+            if any(n not in plane.predictors for n in names):
+                continue
+            store = self._bank_for(names, plane).tiered
+            if store is None:
+                continue
+            store.adopt_hotness(theirs.hotness_snapshot())
+            store.rebalance()
+            warmed += 1
+        self._cold_names |= set(getattr(other, "_cold_names", ()))
+        return warmed
+
+    def tier_metrics(self) -> dict[str, int]:
+        """Tiered-store counters aggregated across model groups."""
+        agg: dict[str, int] = {}
+        for store in self.tiered_stores().values():
+            for k, v in store.metrics.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg

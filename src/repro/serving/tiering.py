@@ -1,0 +1,682 @@
+"""Tiered tenant-bank store: hot device rows, host-paged cold rows, priors.
+
+The fully-resident bank (dense or sharded) is the wall past ~10^5 tenants:
+every (tenant, predictor) transform row costs ``(2K+2N)·4`` device bytes
+*somewhere*, forever.  This module breaks that coupling with a three-tier
+store in which device residency is bounded by CONFIGURATION, not by tenant
+count:
+
+  * **hot tier** — the ``hot_capacity`` hottest tenants' rows live in a
+    device bank (the same ``TransformBank`` row layout today's banked
+    kernel dispatches against) and are only ever moved by an explicit
+    control-plane :meth:`TieredBankStore.rebalance`;
+  * **victim cache** — a bounded ``victim_capacity``-slot device ring
+    where cold tenants' rows are staged on demand (clock eviction).  The
+    async engine prefetches pending windows' rows into it
+    (:meth:`TieredBankStore.prefetch`) so the dispatch hot path normally
+    never blocks on a host read; a miss that *does* reach dispatch is
+    staged synchronously and counted as a ``cold_miss_stall``;
+  * **cold-start prior** — tenants that have not yet passed the Eq.-5
+    sample-size gate (paper Sec. 2.4) score through ONE shared prior row
+    (Beta-mixture default quantiles, Eqs. 6–8, ``core/coldstart.py``)
+    pinned in the last device slot.  Once a tenant's observed stream
+    reaches ``required_sample_size(a, δ, z)`` events, the next
+    ``rebalance`` admits it to its own (host-stored) row.
+
+The authoritative copy of EVERY row is the host-memory
+:class:`HostBankStore` (numpy — ~272 bytes/row at K=2, N=32, so 10^6
+tenants fit in a few hundred MB of RAM); the device bank holds exactly
+``hot_capacity + victim_capacity + 1`` rows regardless of tenant count.
+A dispatch maps tenant ids to device SLOTS and runs the same fused banked
+kernel (``kernels/ops.score_pipeline_banked``) as the dense path — per-row
+compute is independent of bank size and row order, so tiered scores match
+a dense bank built from the same rows BITWISE on f32 (asserted in
+``tests/test_tiering.py``).
+
+Generations and atomicity
+-------------------------
+
+The store carries the same generation discipline as the control plane:
+
+  * :meth:`apply_updates` is the publish endpoint.  It writes refreshed
+    T^Q tables into the host rows AND scatters every device-resident copy
+    (hot, victim, either tier) in ONE locked operation under ONE bumped
+    generation — a post-publish read of any tenant, hot or cold or
+    freshly promoted, serves the new generation's parameters.  Fenced
+    (``generation=``) updates reject non-strictly-newer stamps with
+    :class:`~repro.serving.types.StaleGenerationError`, exactly like
+    ``MuseServer.publish_quantile_maps``; an empty fenced update is a
+    generation fast-forward.
+  * :meth:`rebalance` (promotion / demotion / Eq.-5 admission) is fenced
+    the other way: a caller may pass the generation its decision was
+    computed against, and a stamp OLDER than the store's current
+    generation is rejected — a superseded control pass cannot reshuffle
+    tiers it no longer understands.  Rebalance never changes row VALUES,
+    so it never bumps the generation.
+
+Every read/write of the mutable tier state (slot maps, hotness, seen
+counts, the immutable :class:`_TierView` reference) happens under one
+internal lock; the view itself is immutable and swapped by reference, so
+a dispatch is internally consistent by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hotness import HotnessTracker
+from repro.core.quantiles import required_sample_size
+from repro.core.transforms import (
+    QuantileMap,
+    TransformBank,
+    banked_score_pipeline,
+    pad_quantile_tables,
+)
+from repro.kernels import ops
+from repro.serving.types import StaleGenerationError
+
+
+def _shape_bucket(n: int) -> int:
+    """Next power of two >= n (same bucketing as the server's dispatch:
+    bounded XLA specializations, one per bucket)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def prior_bank_row(
+    prior: Any,
+    ref_quantiles: np.ndarray,
+    num_experts: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """The shared cold-start device row from a fitted Beta-mixture prior.
+
+    ``prior`` is a :class:`~repro.core.coldstart.BetaMixtureFit` (anything
+    with ``.quantiles(levels)``) or a raw source-quantile table.  T^C is
+    the identity (beta=1 — the prior already models the *corrected* score
+    distribution on the training data) and aggregation is uniform; T^Q
+    maps the fitted prior's quantiles onto the reference, i.e. the paper's
+    ``T^Q_{v0}`` (Sec. 2.4) as one bank row.
+    """
+    ref = np.asarray(ref_quantiles, np.float64).ravel()
+    if hasattr(prior, "quantiles"):
+        src = np.asarray(prior.quantiles(np.linspace(0.0, 1.0, len(ref))))
+    else:
+        src = np.asarray(prior, np.float64).ravel()
+        if len(src) != len(ref):
+            src = np.interp(np.linspace(0.0, 1.0, len(ref)),
+                            np.linspace(0.0, 1.0, len(src)), src)
+    return (np.ones(num_experts, np.float32),
+            np.ones(num_experts, np.float32),
+            np.maximum.accumulate(src).astype(np.float32),
+            np.asarray(ref, np.float32))
+
+
+@dataclasses.dataclass
+class TieringConfig:
+    """Capacity + gating knobs for one :class:`TieredBankStore`.
+
+    ``prior`` (optional) is the cold-start row — a
+    ``(betas, weights, src_quantiles, ref_quantiles)`` tuple, typically
+    from :func:`prior_bank_row`.  Without it the prior slot is the
+    identity map and the Eq.-5 admission gate only matters for rows
+    explicitly marked cold.
+    """
+
+    hot_capacity: int = 1024
+    victim_capacity: int = 128
+    decay: float = 0.98               # hotness decay per rebalance window
+    gate_alert_rate: float = 0.01     # Eq. 5 target alert rate ``a``
+    gate_rel_error: float = 0.2       # Eq. 5 relative error ``delta``
+    gate_z: float = 1.96              # Eq. 5 confidence (95%)
+    fused_kernel: bool = True         # banked Pallas kernel vs jnp oracle
+    prior: tuple | None = None
+
+    def __post_init__(self) -> None:
+        if self.hot_capacity < 1:
+            raise ValueError("hot_capacity must be >= 1")
+        if self.victim_capacity < 1:
+            raise ValueError("victim_capacity must be >= 1")
+
+
+class HostBankStore:
+    """Host-memory (numpy) authoritative store of EVERY tenant's bank row.
+
+    Plain contiguous float32 arrays — ``(T, K)`` betas/weights and
+    ``(T, N)`` quantile tables — written in place only under the owning
+    :class:`TieredBankStore`'s lock.  ``admitted`` marks rows past the
+    Eq.-5 gate; un-admitted tenants score through the shared prior slot
+    regardless of what their host row holds.
+    """
+
+    def __init__(self, betas: np.ndarray, weights: np.ndarray,
+                 src_quantiles: np.ndarray, ref_quantiles: np.ndarray,
+                 admitted: np.ndarray | None = None) -> None:
+        # np.array (not asarray): rows handed in may be read-only views of
+        # jax buffers, and write_rows mutates these in place
+        self.betas = np.array(betas, np.float32, order="C")
+        self.weights = np.array(weights, np.float32, order="C")
+        self.src_quantiles = np.array(src_quantiles, np.float32, order="C")
+        self.ref_quantiles = np.array(ref_quantiles, np.float32, order="C")
+        t = self.betas.shape[0]
+        for arr, name in ((self.weights, "weights"),
+                          (self.src_quantiles, "src_quantiles"),
+                          (self.ref_quantiles, "ref_quantiles")):
+            if arr.shape[0] != t:
+                raise ValueError(f"{name} has {arr.shape[0]} rows, betas {t}")
+        self.admitted = (np.ones(t, bool) if admitted is None
+                         else np.asarray(admitted, bool).copy())
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def num_rows(self) -> int:
+        return int(self.betas.shape[0])
+
+    @property
+    def num_experts(self) -> int:
+        return int(self.betas.shape[-1])
+
+    @property
+    def num_quantiles(self) -> int:
+        return int(self.src_quantiles.shape[-1])
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes of the row arrays (the O(total tenants) cost that
+        tiering moves OFF the device)."""
+        return (self.betas.nbytes + self.weights.nbytes
+                + self.src_quantiles.nbytes + self.ref_quantiles.nbytes)
+
+    # ------------------------------------------------------------- builders
+    @staticmethod
+    def from_rows(
+        params: Sequence[tuple],
+        admitted: np.ndarray | None = None,
+    ) -> "HostBankStore":
+        """Stack ragged ``(betas, weights, src_q, ref_q)`` rows, padding the
+        expert axis with (beta=1, weight=0) columns and quantile tables
+        edge-wise — the same semantics-preserving padding as
+        :meth:`TransformBank.from_params`, so a dense bank built from the
+        same params is row-for-row identical."""
+        bank = TransformBank.from_params(params)
+        return HostBankStore(
+            np.asarray(bank.betas), np.asarray(bank.weights),
+            np.asarray(bank.src_quantiles), np.asarray(bank.ref_quantiles),
+            admitted)
+
+    @staticmethod
+    def from_bank(bank: TransformBank,
+                  admitted: np.ndarray | None = None) -> "HostBankStore":
+        return HostBankStore(
+            np.asarray(bank.betas), np.asarray(bank.weights),
+            np.asarray(bank.src_quantiles), np.asarray(bank.ref_quantiles),
+            admitted)
+
+    # --------------------------------------------------------------- access
+    def rows(self, ids: np.ndarray) -> tuple[np.ndarray, np.ndarray,
+                                             np.ndarray, np.ndarray]:
+        ids = np.asarray(ids, np.int64)
+        return (self.betas[ids], self.weights[ids],
+                self.src_quantiles[ids], self.ref_quantiles[ids])
+
+    def write_rows(
+        self,
+        updates: Mapping[int, "QuantileMap | tuple"],
+    ) -> np.ndarray:
+        """In-place T^Q table replacement for the given rows (the publish
+        write path — caller holds the tier lock).  Narrow tables are
+        edge-padded exactly like the bank ``with_rows`` scatters.  Returns
+        the updated row ids."""
+        ids = []
+        n = self.num_quantiles
+        for row, value in sorted(updates.items()):
+            if not 0 <= row < self.num_rows:
+                raise IndexError(f"row {row} outside store of {self.num_rows}")
+            src, ref = pad_quantile_tables(value, n, row=row)
+            self.src_quantiles[row] = np.asarray(src)
+            self.ref_quantiles[row] = np.asarray(ref)
+            ids.append(row)
+        return np.asarray(ids, np.int64)
+
+    def dense_bank(self, generation: int = 0) -> TransformBank:
+        """The dense bank these rows describe (parity oracle for tests)."""
+        return TransformBank(
+            betas=jnp.asarray(self.betas), weights=jnp.asarray(self.weights),
+            src_quantiles=jnp.asarray(self.src_quantiles),
+            ref_quantiles=jnp.asarray(self.ref_quantiles),
+            generation=generation)
+
+
+@dataclasses.dataclass(frozen=True)
+class _TierView:
+    """One immutable device-bank snapshot a dispatch scores against.
+
+    ``hot_capacity + victim_capacity + 1`` rows: hot slots, victim slots,
+    then the pinned prior row.  Swapped by reference under the store lock
+    (staging, rebalance, publish); a dispatch that captured a view scores
+    every row of its window against exactly one generation.
+    """
+
+    betas: Any            # (R, K) jax
+    weights: Any          # (R, K)
+    src_quantiles: Any    # (R, N)
+    ref_quantiles: Any    # (R, N)
+    generation: int
+
+    @property
+    def nbytes(self) -> int:
+        r = int(self.betas.shape[0])
+        k = int(self.betas.shape[-1])
+        n = int(self.src_quantiles.shape[-1])
+        return r * (2 * k + 2 * n) * 4
+
+
+class TieredBankStore:
+    """Hot/victim/prior tiered serving view over a :class:`HostBankStore`.
+
+    See the module docstring for the tier model.  All public methods are
+    thread-safe; ``dispatch`` holds the store lock across its kernel
+    call(s) so the (slot map, device view) pair it scores with is
+    consistent and each window serves under one generation — publishes
+    from another thread land before or after a window, never inside it.
+    """
+
+    def __init__(self, host: HostBankStore,
+                 config: TieringConfig | None = None, *,
+                 generation: int = 0) -> None:
+        self.host = host
+        self.config = config or TieringConfig()
+        t = host.num_rows
+        self._hot = min(self.config.hot_capacity, t)
+        self._victims = self.config.victim_capacity
+        self._prior_slot = self._hot + self._victims
+        self._gate_n = required_sample_size(
+            self.config.gate_alert_rate, self.config.gate_rel_error,
+            self.config.gate_z)
+        self.tracker = HotnessTracker(t, self.config.decay)
+        self._seen = np.zeros(t, np.int64)
+        self._slot_of = np.full(t, -1, np.int32)   # -1 = not device-resident
+        self._owner = np.full(self._prior_slot, -1, np.int64)
+        self._hand = 0                             # victim clock hand
+        # identity witness for the serving layer's bank cache (which
+        # pipelines this store's host rows were built from); opaque here
+        self.source_pipelines: tuple | None = None
+        k, n = host.num_experts, host.num_quantiles
+        rows = self._prior_slot + 1
+        betas = np.ones((rows, k), np.float32)
+        weights = np.ones((rows, k), np.float32)
+        ident = np.linspace(0.0, 1.0, n, dtype=np.float32)
+        src = np.broadcast_to(ident, (rows, n)).copy()
+        ref = src.copy()
+        if self.config.prior is not None:
+            pb, pw, ps, pr = self.config.prior
+            betas[-1] = np.asarray(pb, np.float32)
+            weights[-1] = np.asarray(pw, np.float32)
+            ps, pr = pad_quantile_tables(
+                (np.asarray(ps), np.asarray(pr)), n)
+            src[-1] = np.asarray(ps)
+            ref[-1] = np.asarray(pr)
+        self._view = _TierView(
+            jnp.asarray(betas), jnp.asarray(weights),
+            jnp.asarray(src), jnp.asarray(ref), generation)
+        self._lock = threading.Lock()
+        self.metrics: dict[str, int] = {
+            "dispatches": 0, "events": 0, "hot_hits": 0, "victim_hits": 0,
+            "prior_scores": 0, "cold_miss_stalls": 0, "stalled_events": 0,
+            "staged_rows": 0, "prefetched_rows": 0, "extra_passes": 0,
+            "promotions": 0, "demotions": 0, "admissions": 0, "updates": 0,
+        }
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def num_rows(self) -> int:
+        return self.host.num_rows
+
+    @property
+    def hot_capacity(self) -> int:
+        return self._hot
+
+    @property
+    def victim_capacity(self) -> int:
+        return self._victims
+
+    @property
+    def generation(self) -> int:
+        return self._view.generation
+
+    @property
+    def gate_samples(self) -> int:
+        """Eq.-5 sample count a tenant's stream needs for admission."""
+        return self._gate_n
+
+    @property
+    def device_bytes(self) -> int:
+        """Device-resident bank bytes — a function of CONFIGURED capacity
+        (hot + victim + prior row), independent of ``num_rows``."""
+        return self._view.nbytes
+
+    @property
+    def host_bytes(self) -> int:
+        return self.host.nbytes
+
+    def hot_rows(self) -> np.ndarray:
+        """Tenant ids currently in the hot tier (unordered)."""
+        with self._lock:
+            owners = self._owner[:self._hot]
+            return owners[owners >= 0].copy()
+
+    def resident_rows(self) -> np.ndarray:
+        """Tenant ids device-resident in either tier (unordered)."""
+        with self._lock:
+            return self._owner[self._owner >= 0].copy()
+
+    # --------------------------------------------------------------- private
+    def _effective_slots(self, tid: np.ndarray) -> np.ndarray:
+        """Device slot per event: un-admitted -> prior slot; admitted ->
+        its resident slot or -1 (needs staging).  Caller holds the lock."""
+        slots = self._slot_of[tid].astype(np.int32)
+        return np.where(self.host.admitted[tid], slots,
+                        np.int32(self._prior_slot))
+
+    def _stage_locked(self, take: np.ndarray,
+                      protected: set[int]) -> None:
+        """Page ``take`` host rows into victim slots (clock eviction,
+        skipping ``protected`` slots).  Caller holds the lock and
+        guarantees ``len(take) <= victim_capacity - len(protected)``."""
+        assigned: list[int] = []
+        chosen: set[int] = set()
+        for t in take:
+            for _ in range(self._victims):
+                s = self._hot + self._hand
+                self._hand = (self._hand + 1) % self._victims
+                if s not in protected and s not in chosen:
+                    break
+            else:  # pragma: no cover — caller enforces capacity
+                raise RuntimeError("no victim slot available")
+            chosen.add(s)
+            prev = self._owner[s]
+            if prev >= 0:
+                self._slot_of[prev] = -1
+            self._owner[s] = int(t)
+            self._slot_of[int(t)] = s
+            assigned.append(s)
+        idx = jnp.asarray(assigned, jnp.int32)
+        b, w, qs, qr = self.host.rows(np.asarray(take, np.int64))
+        v = self._view
+        self._view = _TierView(
+            v.betas.at[idx].set(jnp.asarray(b)),
+            v.weights.at[idx].set(jnp.asarray(w)),
+            v.src_quantiles.at[idx].set(jnp.asarray(qs)),
+            v.ref_quantiles.at[idx].set(jnp.asarray(qr)),
+            v.generation)
+        self.metrics["staged_rows"] += len(take)
+
+    def _score_slots(self, raws: np.ndarray, slots: np.ndarray,
+                     view: _TierView) -> np.ndarray:
+        """One banked kernel call over slot-indexed rows (pow-2 bucketed,
+        edge-padded slot vector — identical padding to the dense server
+        path, which the bitwise-parity contract depends on)."""
+        b = len(slots)
+        pad = _shape_bucket(b) - b
+        if pad:
+            raws = np.concatenate(
+                [raws, np.zeros((pad,) + raws.shape[1:], raws.dtype)])
+            slots = np.concatenate(
+                [slots, np.full(pad, slots[-1], np.int32)])
+        impl = ops.score_pipeline_banked if self.config.fused_kernel \
+            else banked_score_pipeline
+        out = impl(jnp.asarray(raws, jnp.float32),
+                   jnp.asarray(slots, jnp.int32),
+                   view.betas, view.weights,
+                   view.src_quantiles, view.ref_quantiles)
+        return np.asarray(out)[:b]
+
+    # -------------------------------------------------------------- serving
+    def dispatch(self, expert_scores: np.ndarray, tenant_idx: np.ndarray
+                 ) -> tuple[np.ndarray, int]:
+        """Score one mixed-tenant window; returns ``(scores, generation)``.
+
+        Hot path (every referenced row device-resident — the prefetched
+        steady state): one slot remap + ONE banked kernel call, no host
+        reads.  A cold miss stages the row synchronously into the victim
+        cache first (counted in ``cold_miss_stalls``/``stalled_events``);
+        if a window references more distinct cold tenants than the victim
+        cache holds, it is scored in multiple passes (``extra_passes``) —
+        correctness never depends on capacity.
+        """
+        raws = np.asarray(expert_scores, np.float32)
+        tid = np.asarray(tenant_idx, np.int64).ravel()
+        if tid.size == 0:
+            return np.empty(0, np.float32), self._view.generation
+        with self._lock:
+            self.tracker.record(tid)
+            self._seen += np.bincount(tid, minlength=len(self._seen))
+            self.metrics["dispatches"] += 1
+            self.metrics["events"] += len(tid)
+            eff = self._effective_slots(tid)
+            self.metrics["prior_scores"] += int(
+                np.sum(eff == self._prior_slot))
+            self.metrics["hot_hits"] += int(
+                np.sum((eff >= 0) & (eff < self._hot)))
+            self.metrics["victim_hits"] += int(
+                np.sum((eff >= self._hot) & (eff < self._prior_slot)))
+
+            out = np.empty(len(tid), np.float32)
+            done = np.zeros(len(tid), bool)
+            passes = 0
+            while not done.all():
+                eff = self._effective_slots(tid)
+                ready = ~done & (eff >= 0)
+                missing = ~done & (eff < 0)
+                if missing.any():
+                    miss = np.unique(tid[missing])
+                    # victim slots serving THIS pass's ready events must
+                    # not be evicted out from under the same kernel call
+                    live = np.unique(eff[ready]) if ready.any() else ()
+                    protected = {int(s) for s in live
+                                 if self._hot <= s < self._prior_slot}
+                    room = self._victims - len(protected)
+                    if room > 0:
+                        take = miss[:room]
+                        self._stage_locked(take, protected)
+                        self.metrics["cold_miss_stalls"] += len(take)
+                        staged_ev = ~done & np.isin(tid, take)
+                        self.metrics["stalled_events"] += int(
+                            staged_ev.sum())
+                        eff = self._effective_slots(tid)
+                        ready = ~done & (eff >= 0)
+                ev = np.flatnonzero(ready)
+                if not len(ev):  # pragma: no cover — room>0 or ready!=[]
+                    raise RuntimeError("tiered dispatch made no progress")
+                out[ev] = self._score_slots(raws[ev], eff[ev], self._view)
+                done[ev] = True
+                passes += 1
+            if passes > 1:
+                self.metrics["extra_passes"] += passes - 1
+            return out, self._view.generation
+
+    def prefetch(self, tenant_idx: np.ndarray) -> int:
+        """Stage pending windows' cold rows ahead of dispatch (no stall
+        accounting, no hotness recording — the dispatch that actually
+        serves the window records it).  At most ``victim_capacity`` rows
+        are staged per call; returns the number staged."""
+        tid = np.asarray(tenant_idx, np.int64).ravel()
+        if tid.size == 0:
+            return 0
+        with self._lock:
+            uniq = np.unique(tid)
+            uniq = uniq[self.host.admitted[uniq]]
+            miss = uniq[self._slot_of[uniq] < 0]
+            if not len(miss):
+                return 0
+            take = miss[:self._victims]
+            self._stage_locked(take, set())
+            self.metrics["prefetched_rows"] += len(take)
+            return len(take)
+
+    def pre_quantile(self, expert_scores: np.ndarray,
+                     tenant_idx: np.ndarray) -> np.ndarray:
+        """Per-event T^Q input (corrected weighted aggregate) through the
+        rows the dispatch serves — host rows for admitted tenants, the
+        prior row otherwise.  Numpy on host arrays: the track stage must
+        not pull cold rows onto the device just to fit estimators."""
+        raws = np.asarray(expert_scores, np.float32)
+        tid = np.asarray(tenant_idx, np.int64).ravel()
+        with self._lock:
+            adm = self.host.admitted[tid]
+            b = self.host.betas[tid]
+            w = self.host.weights[tid]
+            v = self._view
+            pb = np.asarray(v.betas[-1])
+            pw = np.asarray(v.weights[-1])
+        b = np.where(adm[:, None], b, pb[None, :])
+        w = np.where(adm[:, None], w, pw[None, :])
+        corrected = (b * raws) / (1.0 - (1.0 - b) * raws)
+        w = w / np.sum(w, axis=-1, keepdims=True)
+        return np.sum(corrected * w, axis=-1)
+
+    # -------------------------------------------------------------- control
+    def rebalance(self, *, generation: int | None = None) -> dict[str, int]:
+        """Explicit control-plane promotion/demotion + Eq.-5 admission.
+
+        ``generation`` fences a decision computed against an old view:
+        a stamp STRICTLY OLDER than the store's current generation raises
+        :class:`StaleGenerationError` (a superseded control pass must not
+        reshuffle tiers).  Rebalance moves rows between tiers but never
+        changes their values, so the generation itself is unchanged.
+
+        Admission: tenants whose observed stream reached ``gate_samples``
+        events leave the prior tier (their host row — the prior's params
+        until a calibration publish refreshes them — becomes servable).
+        Promotion: the ``hot_capacity`` hottest admitted tenants by
+        decayed access count hold the hot slots; everyone else pages
+        through the victim cache.  Returns a summary dict.
+        """
+        with self._lock:
+            cur = self._view.generation
+            if generation is not None and generation < cur:
+                raise StaleGenerationError(generation, cur)
+            newly = np.flatnonzero(~self.host.admitted
+                                   & (self._seen >= self._gate_n))
+            if len(newly):
+                self.host.admitted[newly] = True
+            self.tracker.tick()
+            want = self.tracker.top(self._hot, mask=self.host.admitted)
+            want_set = {int(t) for t in want}
+            cur_hot = {int(self._owner[s]): s for s in range(self._hot)
+                       if self._owner[s] >= 0}
+            demote = [t for t in cur_hot if t not in want_set]
+            promote = [int(t) for t in want if int(t) not in cur_hot]
+            for t in demote:
+                self._owner[cur_hot[t]] = -1
+                self._slot_of[t] = -1
+            free = [s for s in range(self._hot) if self._owner[s] < 0]
+            if promote:
+                slots: list[int] = []
+                for t, s in zip(promote, free):
+                    old = self._slot_of[t]
+                    if old >= 0:           # leaving the victim cache
+                        self._owner[old] = -1
+                    self._owner[s] = t
+                    self._slot_of[t] = s
+                    slots.append(s)
+                idx = jnp.asarray(slots, jnp.int32)
+                b, w, qs, qr = self.host.rows(np.asarray(promote, np.int64))
+                v = self._view
+                self._view = _TierView(
+                    v.betas.at[idx].set(jnp.asarray(b)),
+                    v.weights.at[idx].set(jnp.asarray(w)),
+                    v.src_quantiles.at[idx].set(jnp.asarray(qs)),
+                    v.ref_quantiles.at[idx].set(jnp.asarray(qr)),
+                    v.generation)
+            self.metrics["admissions"] += len(newly)
+            self.metrics["promotions"] += len(promote)
+            self.metrics["demotions"] += len(demote)
+            return {"admitted": len(newly), "promoted": len(promote),
+                    "demoted": len(demote), "generation": cur}
+
+    def apply_updates(self, updates: Mapping[int, "QuantileMap | tuple"],
+                      *, generation: int | None = None) -> int:
+        """Publish refreshed T^Q tables into BOTH tiers atomically.
+
+        Host rows are rewritten in place and every device-resident copy
+        (hot slot or victim slot) is scattered into a NEW view under the
+        new generation, all inside one lock hold — no read anywhere can
+        observe the old table after this returns.  Updated rows are marked
+        admitted (a published map means the stream passed calibration).
+        Fencing matches ``MuseServer.publish_quantile_maps``: with
+        ``generation=`` the stamp must be strictly newer (else
+        :class:`StaleGenerationError`); an empty fenced update
+        fast-forwards the generation; an empty unfenced update is a no-op.
+        Returns the store generation after the call.
+        """
+        with self._lock:
+            cur = self._view.generation
+            if generation is None:
+                if not updates:
+                    return cur
+                gen = cur + 1
+            else:
+                if generation <= cur:
+                    raise StaleGenerationError(generation, cur)
+                gen = generation
+            v = self._view
+            if updates:
+                ids = self.host.write_rows(updates)
+                self.host.admitted[ids] = True
+                self.metrics["updates"] += len(ids)
+                resident = ids[self._slot_of[ids] >= 0]
+                if len(resident):
+                    idx = jnp.asarray(self._slot_of[resident], jnp.int32)
+                    _, _, qs, qr = self.host.rows(resident)
+                    self._view = _TierView(
+                        v.betas, v.weights,
+                        v.src_quantiles.at[idx].set(jnp.asarray(qs)),
+                        v.ref_quantiles.at[idx].set(jnp.asarray(qr)),
+                        gen)
+                    return gen
+            self._view = dataclasses.replace(v, generation=gen)
+            return gen
+
+    def mark_cold(self, rows: Sequence[int]) -> None:
+        """Send rows back behind the Eq.-5 gate: they score through the
+        prior slot until their stream re-reaches ``gate_samples`` events
+        and a ``rebalance`` re-admits them.  Any device-resident copy is
+        evicted (unreachable rows must not hold slots)."""
+        ids = np.asarray(list(rows), np.int64)
+        if not len(ids):
+            return
+        with self._lock:
+            self.host.admitted[ids] = False
+            self._seen[ids] = 0
+            resident = ids[self._slot_of[ids] >= 0]
+            for t in resident:
+                self._owner[self._slot_of[t]] = -1
+                self._slot_of[t] = -1
+
+    def seen(self, row: int) -> int:
+        """Observed event count for one tenant (the Eq.-5 gate input)."""
+        return int(self._seen[row])
+
+    # ---------------------------------------------------------- persistence
+    def hotness_snapshot(self) -> dict:
+        """Portable hotness/admission state a surged replica adopts so it
+        warms up with its predecessor's hot set instead of a cold one."""
+        with self._lock:
+            return {"tracker": self.tracker.snapshot(),
+                    "seen": self._seen.copy(),
+                    "admitted": self.host.admitted.copy()}
+
+    def adopt_hotness(self, snap: dict) -> None:
+        with self._lock:
+            self.tracker.adopt(snap["tracker"])
+            seen = np.asarray(snap["seen"], np.int64)
+            adm = np.asarray(snap["admitted"], bool)
+            n = min(len(seen), len(self._seen))
+            self._seen[:n] = seen[:n]
+            self.host.admitted[:n] = adm[:n]

@@ -12,6 +12,26 @@ from repro.core.routing import Intent
 _req_counter = itertools.count()
 
 
+class StaleGenerationError(RuntimeError):
+    """A fenced publish arrived with a generation ≤ the one already served.
+
+    The fleet publish protocol stamps every broadcast with the fleet's
+    target generation; a replica that already serves an equal-or-newer
+    generation MUST reject the publish (a late ack from a superseded fleet
+    pass can otherwise roll a replica's transformations backwards).  The
+    tiered bank store (``serving/tiering.py``) enforces the same fence on
+    its ``apply_updates``/``rebalance`` control operations, so it lives
+    here rather than in ``server.py`` (which re-exports it).
+    """
+
+    def __init__(self, requested: int, current: int) -> None:
+        super().__init__(
+            f"fenced publish at generation {requested} rejected: replica "
+            f"already serves generation {current}")
+        self.requested = requested
+        self.current = current
+
+
 @dataclasses.dataclass(frozen=True)
 class ScoringRequest:
     intent: Intent

@@ -12,6 +12,10 @@
 #   ./test.sh --adversarial  the attack-campaign + audit-trail suite (fast
 #                            subset also rides the default lane; the multi-day
 #                            replay itself is additionally marked slow)
+#   ./test.sh --tiering      only the tiered-bank-store campaigns (random
+#                            promote/demote/publish property tests, engine
+#                            prefetch, rollout warm start; the fast tiering
+#                            unit tests ride the default lane unmarked)
 #   ./test.sh --all          everything (what CI tier-1 runs)
 #   ./test.sh [pytest args...]   extra args forwarded to pytest
 set -euo pipefail
@@ -29,6 +33,7 @@ case "${1:-}" in
   --sharded)     shift; exec python -m pytest -q -m sharded "$@" ;;
   --fleet)       shift; exec python -m pytest -q -m fleet "$@" ;;
   --adversarial) shift; exec python -m pytest -q -m adversarial "$@" ;;
+  --tiering)     shift; exec python -m pytest -q -m tiering "$@" ;;
   --all)         shift; exec python -m pytest -q "$@" ;;
-  *)             exec python -m pytest -q -m "not slow and not concurrency and not sharded and not fleet" "$@" ;;
+  *)             exec python -m pytest -q -m "not slow and not concurrency and not sharded and not fleet and not tiering" "$@" ;;
 esac
