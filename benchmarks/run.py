@@ -4,6 +4,9 @@ Prints ``name,us_per_call,derived`` CSV rows per the harness contract, one
 row per headline metric of each benchmark, then a human-readable summary.
 
   python -m benchmarks.run [--quick]
+  python -m benchmarks.run --check-mirrors   # no benches; verify repo-root
+                                             # BENCH_*.json mirrors match
+                                             # benchmarks/results/
 """
 from __future__ import annotations
 
@@ -37,11 +40,57 @@ def _mirror(name: str, us_per_call: float, result: dict) -> None:
         f.write("\n")
 
 
+def check_mirrors() -> int:
+    """Verify every ``benchmarks/results/BENCH_<name>.json`` has a repo-root
+    mirror whose scalar metrics match it exactly.
+
+    The two copies are written from the same in-memory result dict (the
+    bench module writes results/, ``_mirror`` writes the root summary), so
+    any divergence means one side was regenerated without the other —
+    exactly the drift this check exists to catch.  Returns a process exit
+    code (0 = consistent).
+    """
+    results_dir = os.path.join(ROOT, "benchmarks", "results")
+    problems: list[str] = []
+    checked = 0
+    for fn in sorted(os.listdir(results_dir)):
+        if not (fn.startswith("BENCH_") and fn.endswith(".json")):
+            continue
+        checked += 1
+        root_path = os.path.join(ROOT, fn)
+        if not os.path.exists(root_path):
+            problems.append(f"{fn}: repo-root mirror missing")
+            continue
+        with open(os.path.join(results_dir, fn)) as f:
+            full = _scalars(json.load(f))
+        with open(root_path) as f:
+            mirror = json.load(f)
+        missing = sorted(k for k in full if k not in mirror)
+        drifted = sorted(k for k in full if k in mirror and mirror[k] != full[k])
+        if missing:
+            problems.append(f"{fn}: mirror missing keys {missing}")
+        if drifted:
+            for k in drifted:
+                problems.append(
+                    f"{fn}: {k} results={full[k]!r} mirror={mirror[k]!r}")
+    if problems:
+        for p in problems:
+            print(f"MIRROR DRIFT {p}", file=sys.stderr)
+        return 1
+    print(f"# mirrors consistent: {checked} results files checked")
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller sample sizes (CI mode)")
+    ap.add_argument("--check-mirrors", action="store_true",
+                    help="only verify repo-root BENCH_*.json mirrors match "
+                         "benchmarks/results/; run no benchmarks")
     args = ap.parse_args()
+    if args.check_mirrors:
+        sys.exit(check_mirrors())
     quick = args.quick
 
     print("name,us_per_call,derived")
@@ -156,6 +205,9 @@ def main() -> None:
          f"hot_vs_s8={r['hot_vs_s8_ratio']:.2f}x;"
          f"stall_rate_mixed={r['stall_rate_mixed_at_max']:.4f};"
          f"stall_rate_prefetched={r['stall_rate_prefetched_at_max']:.4f};"
+         f"p99_ms_locked_staging={r['p99_ms_dispatch_locked_staging']:.2f};"
+         f"p99_ms_overlap_staging={r['p99_ms_dispatch_overlap_staging']:.2f};"
+         f"stall_fix_p99_speedup={r['stall_fix_p99_speedup']:.2f}x;"
          f"bitwise_parity={r['bitwise_parity']}")
     _mirror("tiered_bank", r["us_per_batch_hot_at_max"], r)
 

@@ -414,6 +414,41 @@ def _banked_pre_quantile(expert_scores: Array, tenant_idx: Array,
 TENANT_AXIS = "tenants"  # mesh axis name the bank rows are partitioned over
 
 
+def shard_rows(num_rows: int, num_shards: int,
+               shard_of: np.ndarray | None = None
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Row-partition rule shared by every sharded container.
+
+    Assigns each of ``num_rows`` global rows an owning shard (default:
+    round-robin ``t % S``, occupancy within one row of even) and a local
+    id in global-row order within the shard.  Both
+    :meth:`ShardedTransformBank.from_dense` and the tiered-over-sharded
+    store (``serving/tiering.ShardedTieredBankStore``) derive their
+    global↔local remaps from THIS function, so a hotness snapshot or a
+    publish addressed by global row id lands on the same (shard, local)
+    coordinates whichever container serves it.
+
+    Returns ``(shard_of, local_of, row_counts)``; local ids are assigned
+    vectorized (publishes run under the control-plane lock, so an O(T)
+    Python loop would serialize the fleet at large T).
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    assign = (np.arange(num_rows) % num_shards if shard_of is None
+              else np.asarray(shard_of, np.int64).reshape(-1))
+    if assign.shape[0] != num_rows:
+        raise ValueError(
+            f"shard_of has {assign.shape[0]} entries for {num_rows} rows")
+    if assign.size and (assign.min() < 0 or assign.max() >= num_shards):
+        raise ValueError("shard_of entries outside [0, num_shards)")
+    counts = np.bincount(assign, minlength=num_shards).astype(np.int64)
+    order = np.argsort(assign, kind="stable")
+    starts = np.cumsum(counts) - counts
+    local = np.empty(num_rows, np.int64)
+    local[order] = np.arange(num_rows) - np.repeat(starts, counts)
+    return assign, local, counts
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class ShardedTransformBank:
     """A :class:`TransformBank` row-partitioned over a mesh "tenants" axis.
@@ -491,24 +526,8 @@ class ShardedTransformBank:
         shards are padded to the max occupancy with identity rows
         (beta=1, weight=1, identity quantile table) that no request selects.
         """
-        if num_shards < 1:
-            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
         t = bank.num_rows
-        assign = (np.arange(t) % num_shards if shard_of is None
-                  else np.asarray(shard_of, np.int64).reshape(-1))
-        if assign.shape[0] != t:
-            raise ValueError(
-                f"shard_of has {assign.shape[0]} entries for {t} bank rows")
-        if assign.size and (assign.min() < 0 or assign.max() >= num_shards):
-            raise ValueError("shard_of entries outside [0, num_shards)")
-        counts = np.bincount(assign, minlength=num_shards).astype(np.int64)
-        # local slot = position within the shard in global-row order,
-        # vectorized (publishes call this under the control-plane lock, so
-        # an O(T) Python loop would serialize the fleet at large T)
-        order = np.argsort(assign, kind="stable")
-        starts = np.cumsum(counts) - counts
-        local = np.empty(t, np.int64)
-        local[order] = np.arange(t) - np.repeat(starts, counts)
+        assign, local, counts = shard_rows(t, num_shards, shard_of)
         tl = max(int(counts.max()) if counts.size else 0, 1)
         k, n = bank.num_experts, bank.num_quantiles
 

@@ -33,10 +33,13 @@ def make_tenant_mesh(num_shards: int) -> jax.sharding.Mesh:
     """1-D serving mesh over the "tenants" axis (sharded transform banks).
 
     Each of the ``num_shards`` devices holds one row-shard of every
-    :class:`~repro.core.transforms.ShardedTransformBank`; the serving layer
-    buckets requests by owning shard and launches the banked kernel per
-    shard via ``shard_map`` over this axis.  Goes through the jax_compat
-    shim so the same call works on jax 0.4.x and the newest surface.
+    :class:`~repro.core.transforms.ShardedTransformBank` — or, under the
+    tiered-over-sharded topology, one bounded hot-tier/victim-cache view of
+    its shard's host rows (``serving/tiering.ShardedTieredBankStore``); the
+    serving layer buckets requests by owning shard and launches the banked
+    kernel per shard via ``shard_map`` over this axis.  Goes through the
+    jax_compat shim so the same call works on jax 0.4.x and the newest
+    surface.
     """
     if num_shards < 1:
         raise ValueError(f"num_shards must be >= 1, got {num_shards}")

@@ -87,6 +87,15 @@ freshly promoted tenants all serve the new parameters after the publish
 returns.  Scores match a dense bank bitwise on f32 (same banked kernel,
 slot-remapped rows).  See ``serving/tiering.py``.
 
+Tiering COMPOSES with sharding: ``ServerConfig(tenant_shards=S,
+tiering=...)`` gives every shard of the tenant mesh its own bounded hot
+tier + victim cache over a per-shard slice of the host store
+(:class:`~repro.serving.tiering.ShardedTieredBankStore`), scored in one
+``shard_map`` launch per pass through the same dispatcher — device
+residency is ``(hot+victims+1)·(2K+2N)·4`` bytes PER SHARD regardless of
+tenant count, publishes land on every shard under ONE generation, and
+scores still match the dense bank bitwise on f32.
+
 Client decision loop + audit trail
 ----------------------------------
 
@@ -141,6 +150,7 @@ from repro.serving.server import (
 from repro.serving.shadow import ShadowSink
 from repro.serving.tiering import (
     HostBankStore,
+    ShardedTieredBankStore,
     TieredBankStore,
     TieringConfig,
     prior_bank_row,
@@ -155,7 +165,8 @@ __all__ = [
     "FleetCalibrationController", "FleetGenerationAudit", "FleetRefreshResult",
     "GenerationLedger", "RefreshPolicy", "RefreshResult", "ReplicaPullFailure",
     "FeatureStore", "HostBankStore", "MuseServer", "ServerConfig",
-    "ShardedBankDispatcher", "StaleGenerationError", "ShadowSink",
+    "ShardedBankDispatcher", "ShardedTieredBankStore",
+    "StaleGenerationError", "ShadowSink",
     "ScoringRequest", "ScoringResponse", "ShadowRecord", "TieredBankStore",
     "TieringConfig", "prior_bank_row",
 ]

@@ -416,7 +416,9 @@ class CalibrationController:
             # tiered topology: a publish may have just admitted tenants past
             # the Eq.-5 gate (their first calibrated map landed) — run one
             # promotion pass so they get real hot/victim slots instead of
-            # paging on their next window.  No-op on non-tiered servers.
+            # paging on their next window.  No-op on non-tiered servers;
+            # under tiered-over-sharded this rebalances every shard's tier
+            # in one lockstep pass (per-shard clocks, one store op).
             rebalance = getattr(self.server, "rebalance_tiers", None)
             if rebalance is not None:
                 rebalance()

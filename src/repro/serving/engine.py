@@ -138,6 +138,15 @@ class AsyncDispatchEngine:
         # exception; submit_many windows have no futures, so this list is
         # the ONLY place a bulk-ingestion caller can see a dropped window)
         self.errors: list[tuple[str, BaseException]] = []
+        # real faults raised by the anti-stall prefetch hook (bad tenant id,
+        # torn store ref, ...).  Prefetch is best-effort so these never kill
+        # a poll tick or a window, but silently eating them turns a real bug
+        # into an invisible throughput cliff (every window pays the cold
+        # stall the prefetch was meant to hide) — so they are counted here
+        # and appended to ``errors``.  Expected benign races (the window
+        # dispatched or the predictor undeployed between collection and
+        # prefetch -> KeyError) are NOT counted.
+        self.prefetch_errors = 0
         self.window_log: list[dict] = []       # per-window dispatch records
         self._epoch = 0
         self._running = False
@@ -274,7 +283,7 @@ class AsyncDispatchEngine:
         """Flush aged-out windows into the pipeline; returns windows launched.
 
         Safe to call manually, but ``start()`` makes it self-scheduling."""
-        pending_names: list[list[str]] = []
+        pending: list[tuple[str, list[str]]] = []
         with self._lock:
             n = 0
             for key, batch in self.batcher.expired():
@@ -291,15 +300,20 @@ class AsyncDispatchEngine:
                         if meta:
                             names.append(meta[0][1].live)
                     if names:
-                        pending_names.append(names)
-        for names in pending_names:
+                        pending.append((key, names))
+        for key, names in pending:
             try:
                 # create=False: speculative pending contents only warm
                 # stores that already exist (a window may never dispatch
                 # with exactly this predictor subset)
                 self.server.prefetch_transforms(names, create=False)
-            except Exception:  # noqa: BLE001 — prefetch must never kill poll
-                pass
+            except KeyError:
+                # expected race: the window dispatched / the predictor was
+                # undeployed between the locked collection above and this
+                # call — the names no longer resolve; nothing to warm
+                continue
+            except Exception as e:  # noqa: BLE001 — must never kill poll
+                self._note_prefetch_error(key, e)
         return n
 
     def flush(self) -> int:
@@ -435,6 +449,18 @@ class AsyncDispatchEngine:
             shadow_jobs=list(shadow_groups.values()), futures=futures,
             routing_version=self.server.routing.version)
 
+    def _note_prefetch_error(self, key: str, exc: BaseException) -> None:
+        """Record a non-race prefetch fault: the window still dispatches
+        (it just pays the cold-miss stall the prefetch would have hidden),
+        so nothing fails a future — but the fault is counted and kept in
+        ``errors`` so a recurring bug is visible instead of a silent
+        throughput cliff."""
+        with self._lock:
+            self.prefetch_errors += 1
+            self.errors.append((key, exc))
+            if len(self.errors) > 256:
+                del self.errors[:128]
+
     def _fail(self, win: _Window, exc: BaseException) -> None:
         with self._lock:
             self.errors.append((win.key, exc))
@@ -463,8 +489,14 @@ class AsyncDispatchEngine:
                 try:
                     self.server.prefetch_transforms(
                         win.pred_names, plane, create=True)
-                except Exception:  # noqa: BLE001 — best-effort warm-up
+                except KeyError:
+                    # expected race: a predictor in this window was
+                    # undeployed after the stage-time plane snapshot —
+                    # the transform stage below resolves against a fresh
+                    # plane and fails (or serves) on its own terms
                     pass
+                except Exception as e:  # noqa: BLE001 — best-effort warm-up
+                    self._note_prefetch_error(win.key, e)
         except BaseException as e:  # noqa: BLE001 — deliver via futures
             win.error = e
         self._transforms.submit(self._transform_stage, win)

@@ -288,6 +288,9 @@ class RollingUpdate:
             # adopt the victim replica's hotness/admission state so the new
             # replica's first windows hit a promoted hot set instead of
             # paging its whole working set through the victim cache.
+            # Hotness snapshots are GLOBAL-row-indexed, so this also warms
+            # across topologies (single-tier victim -> tiered-over-sharded
+            # surge and vice versa; see ShardedTieredBankStore).
             if hasattr(new.server, "warm_tiers_from"):
                 new.server.warm_tiers_from(victim.server)
             if self.fleet_calibration is not None:

@@ -75,7 +75,12 @@ from repro.core.transforms import (
 )
 from repro.kernels import ops
 from repro.serving.shadow import ShadowSink
-from repro.serving.tiering import HostBankStore, TieredBankStore, TieringConfig
+from repro.serving.tiering import (
+    HostBankStore,
+    ShardedTieredBankStore,
+    TieredBankStore,
+    TieringConfig,
+)
 from repro.serving.types import (
     ScoringRequest,
     ScoringResponse,
@@ -140,7 +145,9 @@ class ServerConfig:
     # tiered tenant-bank store (serving/tiering.py): hot rows on device,
     # cold rows host-paged through a bounded victim cache, un-gated tenants
     # through the cold-start prior.  None = fully device-resident banks.
-    # Mutually exclusive with tenant_shards > 1.
+    # Composes with tenant_shards > 1: each shard of the tenant mesh gets
+    # its own hot tier + victim cache over a per-shard host store
+    # (ShardedTieredBankStore — bounded residency PER SHARD).
     tiering: TieringConfig | None = None
 
 
@@ -174,7 +181,7 @@ class _BankEntry:
     pipelines: tuple[Any, ...]
     bank: TransformBank | None
     sharded: ShardedTransformBank | None = None
-    tiered: TieredBankStore | None = None
+    tiered: TieredBankStore | ShardedTieredBankStore | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,7 +195,7 @@ class _TieredWindowBank:
     bank's, and ``track`` fits estimators through the same rows the window
     served."""
 
-    store: TieredBankStore
+    store: TieredBankStore | ShardedTieredBankStore
     generation: int
 
     def pre_quantile(self, expert_scores, tenant_idx):
@@ -232,13 +239,28 @@ class ShardedBankDispatcher:
                 out_specs=spec, check_vma=False))
         return self._launch_fn
 
+    def run_packed(self, packed: np.ndarray, pidx: np.ndarray,
+                   betas: Any, weights: Any, src_quantiles: Any,
+                   ref_quantiles: Any) -> np.ndarray:
+        """One shard_map launch over an already-packed (S, Bs, ·) window
+        against explicit (S, R, ·) per-shard parameter stacks.
+
+        The raw launch entry: ``__call__`` buckets/packs a window against
+        a :class:`ShardedTransformBank` and lands here; the tiered-over-
+        sharded store (``serving/tiering.ShardedTieredBankStore``) packs
+        slot-remapped buckets itself and calls this directly with its
+        stacked per-shard tier views — same mesh, same compiled launch.
+        """
+        with self.mesh:
+            return np.asarray(self._launch()(
+                jnp.asarray(packed), jnp.asarray(pidx), betas,
+                weights, src_quantiles, ref_quantiles))
+
     def _run(self, packed: np.ndarray, pidx: np.ndarray,
              sbank: ShardedTransformBank) -> np.ndarray:
         """One shard_map launch over the packed (S, Bs, ·) window."""
-        with self.mesh:
-            return np.asarray(self._launch()(
-                jnp.asarray(packed), jnp.asarray(pidx), sbank.betas,
-                sbank.weights, sbank.src_quantiles, sbank.ref_quantiles))
+        return self.run_packed(packed, pidx, sbank.betas, sbank.weights,
+                               sbank.src_quantiles, sbank.ref_quantiles)
 
     @staticmethod
     def _pack_bucket(packed, pidx, shard, rows_raws, rows_idx, bs):
@@ -326,14 +348,12 @@ class MuseServer:
         # on the old generation and the next stage sees the new one — no
         # torn reads.
         self._plane = _ControlPlane(predictors={}, banks={}, generation=0)
-        # sharded topology: one mesh + dispatcher per server when configured
+        # sharded topology: one mesh + dispatcher per server when configured.
+        # With tiering ALSO set, the dispatcher serves the composed
+        # tiered-over-sharded stores (per-shard hot tiers, one shard_map
+        # launch per window) instead of fully-resident sharded banks.
         self._sharded_dispatch: ShardedBankDispatcher | None = None
         if self.config.tenant_shards > 1:
-            if self.config.tiering is not None:
-                raise ValueError(
-                    "tiering and tenant_shards > 1 are mutually exclusive: "
-                    "the tiered store bounds device residency on ONE "
-                    "replica; shard OR tier a bank, not both")
             from repro.launch.mesh import make_tenant_mesh
             self._sharded_dispatch = ShardedBankDispatcher(
                 make_tenant_mesh(self.config.tenant_shards),
@@ -341,7 +361,8 @@ class MuseServer:
         # tiered topology: stateful stores OUTSIDE the plane (hotness, seen
         # counts and victim-cache residency survive plane swaps); the plane's
         # bank entries hold references, _tier_lock guards the dict itself
-        self._tiered_stores: dict[tuple[str, ...], TieredBankStore] = {}
+        self._tiered_stores: dict[
+            tuple[str, ...], TieredBankStore | ShardedTieredBankStore] = {}
         self._tier_lock = threading.Lock()
         # predictors routed through the cold-start prior until their stream
         # re-passes the Eq.-5 gate (applied to stores built later, too)
@@ -672,15 +693,20 @@ class MuseServer:
         plane.banks[names] = entry
         return entry
 
-    def _tiered_store_for(self, names: tuple[str, ...],
-                          pipelines: tuple[Any, ...]) -> TieredBankStore:
+    def _tiered_store_for(
+            self, names: tuple[str, ...], pipelines: tuple[Any, ...]
+    ) -> TieredBankStore | ShardedTieredBankStore:
         """Fetch (or build) the stateful tiered store for a model group.
 
         Stores live OUTSIDE the control plane so hotness/admission state
         survives plane swaps; ``source_pipelines`` is the same identity
         witness the bank cache uses, so a redeploy-stale store is rebuilt
         from the live pipelines here — adopting the old store's hotness so
-        the hot set carries over."""
+        the hot set carries over.  Under a sharded topology the store is
+        the composed :class:`ShardedTieredBankStore` (per-shard hot tiers
+        over per-shard host slices, dispatched through this server's
+        mesh dispatcher); its global-indexed hotness snapshot lets the
+        adoption below cross topologies too."""
         with self._tier_lock:
             store = self._tiered_stores.get(names)
             if store is not None \
@@ -692,8 +718,15 @@ class MuseServer:
             host = HostBankStore.from_rows(
                 [(p.betas, p.weights, p.src_quantiles, p.ref_quantiles)
                  for p in pipelines])
-            fresh = TieredBankStore(host, self.config.tiering,
-                                    generation=self._plane.generation)
+            if self._sharded_dispatch is not None:
+                fresh: TieredBankStore | ShardedTieredBankStore = \
+                    ShardedTieredBankStore(
+                        host, self.config.tenant_shards, self.config.tiering,
+                        dispatcher=self._sharded_dispatch,
+                        generation=self._plane.generation)
+            else:
+                fresh = TieredBankStore(host, self.config.tiering,
+                                        generation=self._plane.generation)
             fresh.source_pipelines = pipelines
             if store is not None:
                 fresh.adopt_hotness(store.hotness_snapshot())
@@ -799,6 +832,8 @@ class MuseServer:
             scores, gen = entry.tiered.dispatch(raws, tenant_idx)
             self.bump_metric("kernel_dispatches")
             self.bump_metric("tier_dispatches")
+            if isinstance(entry.tiered, ShardedTieredBankStore):
+                self.bump_metric("shard_dispatches")
             return scores, _TieredWindowBank(entry.tiered, gen), tenant_idx
         bank = entry.bank
         b = len(tenant_idx)

@@ -14,8 +14,11 @@
 #                            replay itself is additionally marked slow)
 #   ./test.sh --tiering      only the tiered-bank-store campaigns (random
 #                            promote/demote/publish property tests, engine
-#                            prefetch, rollout warm start; the fast tiering
-#                            unit tests ride the default lane unmarked)
+#                            prefetch, rollout warm start, and the
+#                            tiered-over-sharded composed campaigns — those
+#                            skip themselves below the needed device count,
+#                            so the fast subsets that ride the default lane
+#                            unmarked keep tier-1 green on 1 device)
 #   ./test.sh --all          everything (what CI tier-1 runs)
 #   ./test.sh [pytest args...]   extra args forwarded to pytest
 set -euo pipefail

@@ -26,6 +26,7 @@ import os
 import subprocess
 import sys
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -347,6 +348,178 @@ class TestTieredDispatchParity:
         assert out.shape == (0,) and gen == 0
         assert store.metrics["dispatches"] == 0
 
+    def test_dispatch_hot_path_has_no_tenant_linear_alloc(self):
+        """PR 9 regression: per-window seen counting used
+        ``self._seen += np.bincount(tid, minlength=T)`` — an O(T) int64
+        temp (8 MB at 10^6 tenants) per window, under the dispatch lock.
+        The ``np.add.at`` scatter is O(window); pin the hot-path peak
+        well below one O(T) temp."""
+        import tracemalloc
+        t, k, n = 1_000_000, 1, 2
+        host = HostBankStore(
+            np.ones((t, k), np.float32), np.ones((t, k), np.float32),
+            np.broadcast_to(np.array([0.0, 1.0], np.float32), (t, n)).copy(),
+            np.broadcast_to(np.array([0.0, 1.0], np.float32), (t, n)).copy())
+        store = TieredBankStore(
+            host, TieringConfig(hot_capacity=4, victim_capacity=2,
+                                **EASY_GATE))
+        rng = np.random.default_rng(10)
+        tid = rng.integers(0, 2, 64)
+        raws = rng.uniform(0, 1, (64, k)).astype(np.float32)
+        store.dispatch(raws, tid)          # warm: stage rows + compile
+        tracemalloc.start()
+        store.dispatch(raws, tid)          # pure device-hit window
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        assert store.metrics["cold_miss_stalls"] == 2  # warm-up only
+        # the old bincount temp alone was t * 8 = 8_000_000 bytes
+        assert peak < 4_000_000, f"O(T) allocation on the hot path: {peak}"
+
+    def test_multipass_pad_slot_eviction_parity(self):
+        """_score_slots edge-pads a bucketed slot vector with the LAST
+        event's slot, which may be a live victim slot.  Pad references
+        must not protect that slot from eviction in later passes of the
+        SAME window (protection is rebuilt per pass from the unpadded
+        event slots) — force exactly that eviction and require bitwise
+        parity."""
+        rng = np.random.default_rng(11)
+        store, bank = _store(rng, t=8, hot=1, victims=2)
+        seen_calls: list[tuple[np.ndarray, np.ndarray]] = []
+        orig = store._score_slots
+
+        def spy(raws, slots, view):
+            seen_calls.append((np.asarray(slots).copy(),
+                               store._owner.copy()))
+            return orig(raws, slots, view)
+
+        store._score_slots = spy
+        # pass 1 stages rows {0, 1} and scores events [0, 0, 1] — length
+        # 3, padded to 4 with row 1's victim slot; pass 2 must evict BOTH
+        # victim slots (rows 2, 3 stage over them), re-owning the slot
+        # pass 1's pad referenced
+        tid = np.array([0, 0, 1, 2, 3])
+        raws = rng.uniform(0, 1, (5, 4)).astype(np.float32)
+        got, _ = store.dispatch(raws, tid)
+        assert _bitwise(got, _dense_scores(bank, raws, tid))
+        assert store.metrics["extra_passes"] >= 1
+        assert len(seen_calls) >= 2
+        slots0, _ = seen_calls[0]
+        assert len(slots0) == 3                 # padded call (bucket = 4)
+        pad_slot = int(slots0[-1])
+        assert store.hot_capacity <= pad_slot < store.hot_capacity + 2
+        owners = [own[pad_slot] for _, own in seen_calls]
+        assert any(o != owners[0] for o in owners[1:]), \
+            "pad-referenced victim slot was never evicted in a later pass"
+
+
+# --------------------------------------------------------------------------
+# overlapped (double-buffered) prefetch staging — the PR 9 stall fix
+# --------------------------------------------------------------------------
+
+class TestOverlappedStaging:
+    def test_dispatch_proceeds_while_prefetch_copy_in_flight(self,
+                                                             monkeypatch):
+        """The host->device victim copy runs OFF the dispatch lock: a
+        dispatch completes while a prefetch's staged-view build is stuck
+        mid-copy (with the lock held across the copy this deadlocks)."""
+        import threading
+        rng = np.random.default_rng(12)
+        store, bank = _store(rng, t=16, hot=2, victims=4)
+        store.prefetch(np.array([1, 2]))       # make rows 1, 2 resident
+        orig = TieredBankStore._staged_view
+        started, release = threading.Event(), threading.Event()
+
+        def slow(self, view, slots, take):
+            started.set()
+            assert release.wait(timeout=30)
+            return orig(self, view, slots, take)
+
+        monkeypatch.setattr(TieredBankStore, "_staged_view", slow)
+        result: dict = {}
+        th = threading.Thread(
+            target=lambda: result.update(n=store.prefetch(np.array([5, 6]))))
+        th.start()
+        try:
+            assert started.wait(timeout=30)
+            # copy in flight, lock free: this dispatch (pure victim-hit,
+            # no staging of its own) must complete NOW, not after release
+            tid = np.array([1, 2, 1])
+            raws = rng.uniform(0, 1, (3, 4)).astype(np.float32)
+            got, _ = store.dispatch(raws, tid)
+            assert _bitwise(got, _dense_scores(bank, raws, tid))
+        finally:
+            release.set()
+            th.join(timeout=30)
+        assert result["n"] == 2                # commit landed after release
+        assert store.metrics["staging_conflicts"] == 0
+        assert {5, 6} <= set(store.resident_rows())
+
+    def test_conflicting_publish_invalidates_staged_view(self, monkeypatch):
+        """A publish landing while the prefetch copy is in flight swaps
+        the view; the commit's identity check must catch it (conflict),
+        restage under the lock, and serve the NEW generation's rows."""
+        rng = np.random.default_rng(13)
+        store, bank = _store(rng, t=16, hot=2, victims=4)
+        qm = QuantileMap(np.sort(rng.uniform(0, 1, 32)),
+                         np.linspace(0.0, 1.0, 32) ** 2)
+        orig = TieredBankStore._staged_view
+        fired: list[int] = []
+
+        def hostile(self, view, slots, take):
+            if not fired:
+                fired.append(1)
+                # runs with NO lock held (that is the point of the
+                # overlap) — a concurrent publish swaps the view
+                store.apply_updates({5: qm})
+            return orig(self, view, slots, take)
+
+        monkeypatch.setattr(TieredBankStore, "_staged_view", hostile)
+        assert store.prefetch(np.array([5, 6])) == 2   # restaged path
+        assert store.metrics["staging_conflicts"] == 1
+        assert store.generation == 1
+        # the restaged rows carry the POST-publish host values
+        tid = np.array([5, 6])
+        raws = rng.uniform(0, 1, (2, 4)).astype(np.float32)
+        got, gen = store.dispatch(raws, tid)
+        assert gen == 1
+        assert store.metrics["cold_miss_stalls"] == 0
+        want_bank = store.host.dense_bank(1)
+        assert _bitwise(got, _dense_scores(want_bank, raws, tid))
+
+    def test_mark_cold_during_copy_vetoes_commit(self, monkeypatch):
+        """mark_cold flips admission WITHOUT swapping the view — the
+        commit must re-check eligibility, not just view identity, or a
+        cold-marked tenant's stale row lands device-resident."""
+        rng = np.random.default_rng(14)
+        store, _ = _store(rng, t=16, hot=2, victims=4)
+        orig = TieredBankStore._staged_view
+        fired: list[int] = []
+
+        def hostile(self, view, slots, take):
+            if not fired:
+                fired.append(1)
+                store.mark_cold([5])
+            return orig(self, view, slots, take)
+
+        monkeypatch.setattr(TieredBankStore, "_staged_view", hostile)
+        assert store.prefetch(np.array([5])) == 0
+        assert store.metrics["staging_conflicts"] == 1
+        assert 5 not in set(store.resident_rows())
+
+    def test_legacy_locked_staging_still_correct(self):
+        """overlap_staging=False keeps the old hold-the-lock-across-the-
+        copy behavior (the bench's before/after baseline)."""
+        rng = np.random.default_rng(15)
+        store, bank = _store(rng, t=16, hot=2, victims=4,
+                             overlap_staging=False)
+        assert store.prefetch(np.array([3, 4, 5])) == 3
+        tid = np.array([3, 4, 5, 3])
+        raws = rng.uniform(0, 1, (4, 4)).astype(np.float32)
+        got, _ = store.dispatch(raws, tid)
+        assert _bitwise(got, _dense_scores(bank, raws, tid))
+        assert store.metrics["cold_miss_stalls"] == 0
+        assert store.metrics["staging_conflicts"] == 0
+
 
 # --------------------------------------------------------------------------
 # tiered store: publish + fencing (the control-plane contract)
@@ -537,11 +710,37 @@ class TestTieredServer:
         with pytest.raises(StaleGenerationError):
             tiered.publish_quantile_maps({}, generation=7)
 
-    def test_tiering_and_sharding_mutually_exclusive(self):
-        rules = (ScoringRule(Condition(), "p0"),)
-        with pytest.raises(ValueError, match="mutually exclusive"):
-            MuseServer(RoutingTable(rules, version="v1"),
-                       ServerConfig(tenant_shards=2, tiering=_TIER_CFG))
+    def test_tiering_composes_with_sharding(self):
+        # tiering + tenant_shards is the composed topology now (PR 9 lifted
+        # the old mutual exclusion): the store behind the bank cache is the
+        # per-shard-tiered ShardedTieredBankStore and scores stay bitwise-
+        # equal to the dense server.  S=2 needs 2 devices (the tenant mesh
+        # is built eagerly), so this runs under ./test.sh lanes; tier-1
+        # single-device coverage is the S=1 composed path in
+        # tests/test_tiered_sharded.py.
+        if jax.device_count() < 2:
+            pytest.skip("needs 2 devices (XLA_FLAGS host-device count)")
+        from repro.serving.tiering import ShardedTieredBankStore
+        rules = tuple(ScoringRule(Condition(tenants=(f"t{i}",)), f"p{i}")
+                      for i in range(4)) + \
+            (ScoringRule(Condition(), "p0"),)
+        comp = MuseServer(RoutingTable(rules, version="v1"),
+                          ServerConfig(tenant_shards=2, tiering=_TIER_CFG))
+        for i in range(4):
+            comp.deploy(PredictorSpec(f"p{i}", ("m1", "m2"), (0.2, 0.4),
+                                      (1.0, 1.0), QuantileMap.identity(64)),
+                        FACTORIES)
+        dense = _tenant_server(4)
+        reqs = [_req(f"t{i % 4}", seed=i) for i in range(12)]
+        rd = dense.score_batch(list(reqs))
+        rc = comp.score_batch(list(reqs))
+        for a, b in zip(rd, rc):
+            assert a.score == b.score
+        (store,) = comp.tiered_stores().values()
+        assert isinstance(store, ShardedTieredBankStore)
+        assert store.num_shards == 2
+        assert comp.metrics["shard_dispatches"] >= 1
+        assert comp.metrics["tier_dispatches"] >= 1
 
     def test_decommission_drops_group_stores(self):
         tiered = _tenant_server(2, tiering=_TIER_CFG)
@@ -770,6 +969,87 @@ class TestEnginePrefetch:
         want = [r.score for r in dense.score_batch(
             [_req(f"t{i % 4}", seed=i) for i in range(8)])]
         assert scores == want
+
+    def test_poll_counts_unexpected_prefetch_faults(self, monkeypatch):
+        """A real prefetch bug (bad tenant id, torn store ref) must not be
+        swallowed silently: poll survives, but the fault is counted in
+        ``prefetch_errors`` and lands in ``errors``."""
+        tiered = _tenant_server(4, tiering=_TIER_CFG)
+        tiered.score_batch([_req(f"t{i}", i) for i in range(4)])
+        engine = AsyncDispatchEngine(tiered, max_batch=64, max_wait_ms=1e9)
+        try:
+            engine.submit(_req("t1", seed=0))
+
+            def boom(names, plane=None, *, create=False):
+                raise IndexError("torn store ref")
+
+            monkeypatch.setattr(tiered, "prefetch_transforms", boom)
+            engine.poll()                      # must not raise
+            assert engine.prefetch_errors == 1
+            assert any(isinstance(e, IndexError) for _, e in engine.errors)
+            # the window itself still dispatches (prefetch is best-effort)
+            monkeypatch.undo()
+            engine.flush()
+            engine.drain()
+        finally:
+            engine.close()
+
+    def test_poll_ignores_expected_dispatch_race(self, monkeypatch):
+        """KeyError is the expected race (window dispatched / predictor
+        undeployed between the locked collection and the prefetch call):
+        not an error, not counted."""
+        tiered = _tenant_server(4, tiering=_TIER_CFG)
+        tiered.score_batch([_req(f"t{i}", i) for i in range(4)])
+        engine = AsyncDispatchEngine(tiered, max_batch=64, max_wait_ms=1e9)
+        try:
+            engine.submit(_req("t1", seed=0))
+
+            def race(names, plane=None, *, create=False):
+                raise KeyError("p1")
+
+            monkeypatch.setattr(tiered, "prefetch_transforms", race)
+            engine.poll()
+            assert engine.prefetch_errors == 0
+            assert not engine.errors
+        finally:
+            engine.close()
+
+    def test_model_stage_prefetch_fault_counted_window_survives(
+            self, monkeypatch):
+        """The model stage's create=True prefetch: an unexpected fault is
+        counted but the window still scores (paying the stall the
+        prefetch would have hidden); the expected KeyError race stays
+        uncounted."""
+        tiered = _tenant_server(4, tiering=_TIER_CFG)
+        real = tiered.prefetch_transforms
+        mode = {"exc": ValueError("bad tenant id")}
+
+        def flaky(names, plane=None, *, create=False):
+            if create and mode["exc"] is not None:
+                raise mode["exc"]
+            return real(names, plane, create=create)
+
+        monkeypatch.setattr(tiered, "prefetch_transforms", flaky)
+        engine = AsyncDispatchEngine(tiered, max_batch=4, max_wait_ms=1e9)
+        try:
+            futs = [engine.submit(_req(f"t{i}", seed=i)) for i in range(4)]
+            engine.flush()
+            scores = [f.result(timeout=60).score for f in futs]
+            assert engine.prefetch_errors == 1
+            assert any(isinstance(e, ValueError) for _, e in engine.errors)
+            dense = _tenant_server(4)
+            want = [r.score for r in dense.score_batch(
+                [_req(f"t{i}", seed=i) for i in range(4)])]
+            assert scores == want              # window served regardless
+            mode["exc"] = KeyError("p0")       # expected race: uncounted
+            futs = [engine.submit(_req(f"t{i}", seed=10 + i))
+                    for i in range(4)]
+            engine.flush()
+            for f in futs:
+                f.result(timeout=60)
+            assert engine.prefetch_errors == 1
+        finally:
+            engine.close()
 
     def test_engine_pipeline_stalls_only_before_prefetch_lands(self):
         """Through the full engine pipeline the model stage's create=True
