@@ -18,10 +18,20 @@ Both paths serve identical request streams on identically built servers
 (same seeds), with every serving shape warmed first, and must produce
 identical scores (parity asserted).
 
+The tracking A/B (ROADMAP "fuse quantile tracking into the device
+program"): the same adaptive engine is run with quantile tracking OFF and
+with the fused device tracker ON (``ServerConfig.track_device`` —
+score -> transform -> track as one device dispatch, host estimators
+materialize only at calibration pulls).  The headline
+``tracking_on_off_ratio`` is the acceptance metric: ON throughput must
+approach OFF (>= 0.9x).
+
   PYTHONPATH=src python -m benchmarks.bench_async_engine [--quick]
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -36,8 +46,12 @@ from repro.serving import (
     MicroBatcher,
     MuseServer,
     ServerBatcher,
+    ServerConfig,
 )
 from repro.serving.types import ScoringRequest
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results",
+                            "BENCH_async_engine.json")
 
 DIM = 64
 HIDDEN = 512
@@ -61,7 +75,8 @@ def _mlp_model(seed: int, hidden: int = HIDDEN, dim: int = DIM):
     return lambda x: f(jnp.asarray(np.asarray(x, np.float32)))
 
 
-def _build_server(n_tenants: int) -> MuseServer:
+def _build_server(n_tenants: int,
+                  config: ServerConfig | None = None) -> MuseServer:
     """One predictor per tenant over a shared expert group: mixed-tenant
     windows hit ONE model call + ONE banked kernel dispatch each."""
     factories = {f"m{k}": (lambda k=k: _mlp_model(k))
@@ -70,7 +85,7 @@ def _build_server(n_tenants: int) -> MuseServer:
                   for i in range(n_tenants)) + \
         (ScoringRule(Condition(), "p0"),)
     qs = jnp.linspace(0.0, 1.0, 128)
-    server = MuseServer(RoutingTable(rules, version="v1"))
+    server = MuseServer(RoutingTable(rules, version="v1"), config)
     group = tuple(f"m{k}" for k in range(N_EXPERTS))
     for i in range(n_tenants):
         server.deploy(
@@ -151,8 +166,43 @@ def run(quick: bool = False) -> dict:
     window_sizes = sorted({w["size"] for w in engine.window_log})
     engine.close()
 
+    # --- tracking A/B: OFF vs fused device tracker ON ----------------------
+    # same adaptive engine config; the only variable is the track stage.
+    # ON stages score -> transform -> track as ONE device dispatch and
+    # never pulls estimator state to host inside the timed region.
+    def _adaptive_run(config: ServerConfig | None):
+        server = _build_server(n_tenants, config)
+        _warm(server, n_tenants, sizes)
+        eng = AsyncDispatchEngine(server, max_batch=base_batch,
+                                  max_wait_ms=1e9, adaptive_batch_cap=cap)
+        eng.submit_many(_requests(feats[:base_batch], n_tenants))
+        eng.drain(timeout=300.0)
+        rq = _requests(feats, n_tenants)
+        t0 = time.perf_counter()
+        eng.submit_many(rq)
+        out = eng.drain(timeout=600.0)
+        dt = time.perf_counter() - t0
+        eng.close()
+        return server, rq, out, dt
+
+    server_off, reqs_off, out_off, t_off = _adaptive_run(
+        ServerConfig(track_quantiles=False))
+    server_on, reqs_on, out_on, t_on = _adaptive_run(
+        ServerConfig(track_device=True))
+    assert server_on.metrics["track_staged_windows"] > 0
+    # estimator_streams() is the host-pull boundary: everything staged on
+    # device (warm-up + timed stream) must materialize, nothing lost
+    tracked = sum(e.count for e in server_on.estimator_streams().values())
+    assert tracked == n_events + sum(sizes) + base_batch, tracked
+
     # --- parity: identical scores for identical traffic --------------------
     assert len(out_sync) == len(out_fixed) == len(out_async) == n_events
+    assert len(out_off) == len(out_on) == n_events
+    by_id_off = {r.request_id: r.score for r in out_off}
+    by_id_on = {r.request_id: r.score for r in out_on}
+    err_ab = max(abs(by_id_on[a.request_id] - by_id_off[b.request_id])
+                 for a, b in zip(reqs_on, reqs_off))
+    assert err_ab == 0.0, err_ab   # tracking must never touch the scores
     by_id_sync = {r.request_id: r.score for r in out_sync}
     by_id_fixed = {r.request_id: r.score for r in out_fixed}
     by_id_async = {r.request_id: r.score for r in out_async}
@@ -163,7 +213,7 @@ def run(quick: bool = False) -> dict:
             for a, s in zip(reqs_async, reqs)),
     )
 
-    return {
+    result = {
         "tenants": n_tenants,
         "events": n_events,
         "base_batch": base_batch,
@@ -179,7 +229,19 @@ def run(quick: bool = False) -> dict:
         "speedup_fixed_vs_sync": t_sync / t_fixed,
         "speedup_vs_sync": t_sync / t_async,
         "max_abs_err": float(err),
+        # tracking A/B (acceptance: ON >= 0.9x OFF on the mixed workload)
+        "events_per_s_track_off": n_events / t_off,
+        "events_per_s_track_on": n_events / t_on,
+        "tracking_on_off_ratio": t_off / t_on,
+        "track_staged_windows": int(
+            server_on.metrics["track_staged_windows"]),
+        "track_spills": int(server_on._tracker.spills),
     }
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(result, f, indent=1)
+        f.write("\n")
+    return result
 
 
 if __name__ == "__main__":

@@ -241,6 +241,9 @@ def main() -> None:
          f"speedup_fixed_windows={r['speedup_fixed_vs_sync']:.2f}x;"
          f"events_per_s_async={r['events_per_s_async']:.0f};"
          f"events_per_s_sync={r['events_per_s_sync']:.0f};"
+         f"tracking_on_off_ratio={r['tracking_on_off_ratio']:.2f};"
+         f"events_per_s_track_on={r['events_per_s_track_on']:.0f};"
+         f"events_per_s_track_off={r['events_per_s_track_off']:.0f};"
          f"tenants={r['tenants']};max_abs_err={r['max_abs_err']:.2e}")
     _mirror("async_engine", r["us_per_event_async"], r)
 

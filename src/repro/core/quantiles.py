@@ -111,8 +111,25 @@ class StreamingQuantileEstimator:
 
     def update(self, scores: np.ndarray) -> None:
         scores = np.asarray(scores, dtype=np.float64).ravel()
-        for chunk in np.array_split(scores, max(1, len(scores) // 65536)):
+        # ceil division: floor allowed chunks up to 131071 — double the
+        # documented 65536 bound (array_split over k parts caps each at
+        # ceil(n / k), so k must be ceil(n / 65536))
+        for chunk in np.array_split(scores, max(1, -(-len(scores) // 65536))):
             self._update_chunk(chunk)
+
+    def apply_chunks(self, chunks: list[np.ndarray]) -> None:
+        """Device-backed materialization hook: replay staged samples with
+        one ``update`` call per ORIGINAL tracking window.
+
+        State after a sequence of updates depends on the sample values AND
+        the update-call boundaries (the recent ring bulk-resets on windows
+        >= its capacity; the reservoir RNG draws once per overflow batch),
+        so a device tracker that staged several windows must replay them as
+        the separate calls they were — that is what makes its drained state
+        bitwise-identical to eager tracking (see
+        ``kernels/quantile_track.py``), not merely statistically equal."""
+        for chunk in chunks:
+            self.update(chunk)
 
     def _update_chunk(self, scores: np.ndarray) -> None:
         k = len(scores)

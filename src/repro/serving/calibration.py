@@ -70,6 +70,19 @@ the replica into a fleet-level control plane:
     ``ReplicaSet.dispatch`` keeps every client stream on replicas at or
     above its observed generation, making ``bank_generation`` fleet-
     monotone per stream, not just per replica.
+
+This module is the HOST-PULL BOUNDARY for fused device tracking
+(``ServerConfig(track_device=True)``): while serving, per-window samples
+accumulate in the :class:`~repro.kernels.quantile_track.DeviceQuantileTracker`
+staging buffer and the host estimators lag behind.  Every scan entry
+point the controllers use — ``estimator_streams``,
+``snapshot_estimator_checkpoints``, ``calibration_ready``,
+``fit_custom_quantile_map``, ``save_estimators`` — first drains the
+device stage under the server's estimator lock, replaying the exact
+original window boundaries, so everything here (Eq.-5 gates, merges,
+refits, checkpoints) observes estimator state bitwise identical to
+eager host tracking.  Nothing in this module needs to know which
+tracking mode a replica runs.
 """
 from __future__ import annotations
 

@@ -147,6 +147,12 @@ class AsyncDispatchEngine:
         # dispatched or the predictor undeployed between collection and
         # prefetch -> KeyError) are NOT counted.
         self.prefetch_errors = 0
+        # poll-tick failures (exceptions escaping poll(); the tick chain
+        # survives them — see _poll_tick) and track-stage failures (the
+        # stage must never kill serving, but a recurring fault would
+        # otherwise be an invisible calibration-freshness cliff)
+        self.tick_errors = 0
+        self.track_errors = 0
         self.window_log: list[dict] = []       # per-window dispatch records
         self._epoch = 0
         self._running = False
@@ -178,16 +184,33 @@ class AsyncDispatchEngine:
         return self
 
     def _arm_poll(self) -> None:
-        if not self._running or self._closed:
-            return
-        t = threading.Timer(self._poll_interval_s, self._poll_tick)
-        t.daemon = True
-        self._poll_timer = t
-        t.start()
+        # armed UNDER the lock: checking _running/_closed outside it raced
+        # with close() — close could cancel the already-fired timer and
+        # then lose to this re-arm, leaving a live timer polling into
+        # shut-down executors.  Holding the lock across check + start makes
+        # cancel-then-never-rearm atomic with close's _closed flip.
+        with self._lock:
+            if not self._running or self._closed:
+                return
+            t = threading.Timer(self._poll_interval_s, self._poll_tick)
+            t.daemon = True
+            self._poll_timer = t
+            t.start()
 
     def _poll_tick(self) -> None:
-        self.poll()
-        self._arm_poll()         # poll reschedules itself
+        # try/finally: an exception escaping poll() must not silently kill
+        # the re-arm chain (the engine would stop flushing aged windows
+        # with no visible signal) — it is counted instead
+        try:
+            self.poll()
+        except BaseException as e:  # noqa: BLE001 — surface via metric
+            with self._lock:
+                self.tick_errors += 1
+                self.errors.append(("poll", e))
+                if len(self.errors) > 256:
+                    del self.errors[:128]
+        finally:
+            self._arm_poll()     # poll reschedules itself
 
     def close(self, timeout: float | None = 30.0) -> list[ScoringResponse]:
         """Stop polling, drain every in-flight window, shut the stages down.
@@ -285,6 +308,10 @@ class AsyncDispatchEngine:
         Safe to call manually, but ``start()`` makes it self-scheduling."""
         pending: list[tuple[str, list[str]]] = []
         with self._lock:
+            if self._closed:
+                # a tick that fired just before close() finished must not
+                # launch windows into draining/shut-down executors
+                return 0
             n = 0
             for key, batch in self.batcher.expired():
                 self._launch_locked(self._build_window(key, batch))
@@ -556,5 +583,11 @@ class AsyncDispatchEngine:
         try:
             self.server.track(win.requests, list(range(len(win.requests))),
                               win.pred_names, win.raws, bank, tenant_idx)
-        except BaseException:  # noqa: BLE001 — tracking must never kill serving
-            pass
+        except BaseException as e:  # noqa: BLE001 — must never kill serving
+            # counted + kept in errors: a recurring track fault silently
+            # starves calibration of samples (the refresh gate never opens)
+            with self._lock:
+                self.track_errors += 1
+                self.errors.append((win.key, e))
+                if len(self.errors) > 256:
+                    del self.errors[:128]

@@ -74,6 +74,7 @@ from repro.core.transforms import (
     banked_score_pipeline,
 )
 from repro.kernels import ops
+from repro.kernels.quantile_track import DeviceQuantileTracker
 from repro.serving.shadow import ShadowSink
 from repro.serving.tiering import (
     HostBankStore,
@@ -124,6 +125,30 @@ class FeatureStore:
         return np.concatenate([features, pad], axis=-1)
 
 
+def stream_seed(key: tuple[str, str]) -> int:
+    """Deterministic RNG seed for a (tenant, predictor) estimator stream.
+
+    The old derivation hashed ``"/".join(key)`` unconditionally, which
+    collided for ``("a/b", "c")`` vs ``("a", "b/c")`` — identical seeds
+    mean identical reservoir acceptance sequences for supposedly
+    independent streams.  The join IS injective when no component
+    contains the separator (split on "/" inverts it), so that case keeps
+    the legacy digest — existing deployments with ordinary tenant /
+    predictor names don't have every stream's acceptance sequence
+    reshuffled.  Ambiguous keys (a "/" inside a component) switch to
+    length-prefix framing, led by a ``0xff`` byte: 0xff never occurs in
+    UTF-8 output, so the framed namespace is disjoint from every legacy
+    payload and the combined map is injective.  Checkpointed streams
+    carry their full RNG state, so restores of old checkpoints stay
+    exact across this change."""
+    if any("/" in part for part in key):
+        payload = b"\xff" + b"".join(
+            len(part := p.encode()).to_bytes(4, "big") + part for p in key)
+    else:
+        payload = "/".join(key).encode()
+    return zlib.crc32(payload)
+
+
 @dataclasses.dataclass
 class ServerConfig:
     track_quantiles: bool = True
@@ -149,6 +174,16 @@ class ServerConfig:
     # its own hot tier + victim cache over a per-shard host store
     # (ShardedTieredBankStore — bounded residency PER SHARD).
     tiering: TieringConfig | None = None
+    # fused device tracking (kernels/quantile_track.py): the track stage
+    # becomes one device dispatch (banked pre_quantile aggregate + scatter
+    # into per-stream staging buffers); host estimators materialize only at
+    # the calibration plane's pull boundary (Eq.-5 gating, checkpoint
+    # snapshots, fleet merge).  Bitwise-identical estimator state to eager
+    # host tracking — see the exactness contract in quantile_track.py.
+    track_device: bool = False
+    # per-stream device staging capacity (samples buffered between pulls);
+    # a stream spills to host when its staging would overflow
+    track_staging: int = 4096
 
 
 def _shape_bucket(n: int) -> int:
@@ -342,6 +377,15 @@ class MuseServer:
         # an update is mid-flight would pair arrays with meta (seen counts,
         # ring pointer, RNG state) from different moments — a torn restore
         self._estimator_lock = threading.Lock()
+        # fused device tracking: staged aggregates live in device buffers
+        # owned by this control plane; every tracker call (append on the
+        # track stage, sync at calibration pulls) runs under the estimator
+        # lock, which is what serializes staging against materialization
+        self._tracker: DeviceQuantileTracker | None = None
+        if self.config.track_quantiles and self.config.track_device:
+            self._tracker = DeviceQuantileTracker(
+                self._apply_tracked,
+                staging_capacity=self.config.track_staging)
         # THE served control-plane state: swapped wholesale on every deploy /
         # decommission / calibration publish (never mutated across a publish).
         # A dispatch stage snapshots it once, so an in-flight window finishes
@@ -375,7 +419,10 @@ class MuseServer:
             # blocks whose rows all share one tenant skip the one-hot gather
             # matmuls (see kernels/score_pipeline.py).  uniform/total over
             # all dense fused dispatches = the serving-side skip rate.
-            "skip_blocks_uniform": 0, "skip_blocks_total": 0}
+            "skip_blocks_uniform": 0, "skip_blocks_total": 0,
+            # windows staged by the fused device tracker (vs eager host
+            # fallbacks; spills/fallbacks also count on the tracker itself)
+            "track_staged_windows": 0}
         # dict `+=` is load/add/store — racy once the engine runs stages on
         # several threads (e.g. two model-group lanes); serialize the bumps
         self._metrics_lock = threading.Lock()
@@ -450,9 +497,14 @@ class MuseServer:
         pred.release(self.pool)
         # and its estimator streams: a future predictor redeployed under the
         # same name has a different score distribution — refitting T^Q from
-        # the dead model's stream would publish a miscalibrated map
-        self._estimators = {k: v for k, v in self._estimators.items()
-                            if k[1] != name}
+        # the dead model's stream would publish a miscalibrated map.  Staged
+        # device samples die with the streams (drop_where), so a redeploy
+        # under the same name can never materialize the dead model's scores.
+        with self._estimator_lock:
+            if self._tracker is not None:
+                self._tracker.drop_where(lambda k: k[1] == name)
+            self._estimators = {k: v for k, v in self._estimators.items()
+                                if k[1] != name}
         # tiered stores holding the dead predictor's host row die with it
         # (row indices are positions in the names tuple — unpatchable)
         with self._tier_lock:
@@ -887,24 +939,75 @@ class MuseServer:
         """
         if not self.config.track_quantiles:
             return
+        keys = [(requests[i].intent.tenant, pred_names[j])
+                for j, i in enumerate(idxs)]
+        if self._tracker is not None:
+            # device-fused mode: dense banks stage score -> transform ->
+            # track as ONE device dispatch (the aggregate never syncs to
+            # host); tiered stores compute pre_quantile through host-paged
+            # rows, so only the scatter-append fuses.  Host estimators
+            # materialize at the calibration plane's pull boundary.
+            with self._estimator_lock:
+                if isinstance(bank, TransformBank):
+                    staged = self._tracker.append_fused(
+                        keys, raws, tenant_idx, bank)
+                    if not staged:
+                        agg = np.asarray(bank.pre_quantile(
+                            jnp.asarray(raws, jnp.float32),
+                            jnp.asarray(tenant_idx)))
+                else:
+                    agg = np.asarray(bank.pre_quantile(
+                        jnp.asarray(raws, jnp.float32),
+                        jnp.asarray(tenant_idx)))
+                    staged = self._tracker.append_agg(keys, agg)
+                if not staged:
+                    # one stream outsized the whole staging plane: its
+                    # staged history was drained first (arrival order), so
+                    # an eager update here keeps per-stream sequences exact
+                    self._update_streams(keys, agg)
+            self.bump_metric("track_staged_windows", int(staged))
+            return
         agg = np.asarray(bank.pre_quantile(
             jnp.asarray(raws, jnp.float32), jnp.asarray(tenant_idx)))
-        by_stream: dict[tuple[str, str], list[int]] = {}
-        for j, i in enumerate(idxs):
-            key = (requests[i].intent.tenant, pred_names[j])
-            by_stream.setdefault(key, []).append(j)
         # one batched reservoir update per (tenant, predictor) stream,
         # serialized with estimator checkpoints (see _estimator_lock)
         with self._estimator_lock:
-            for key, rows in by_stream.items():
-                est = self._estimators.get(key)
-                if est is None:
-                    est = StreamingQuantileEstimator(
-                        self.config.quantile_capacity,
-                        seed=zlib.crc32("/".join(key).encode()),
-                        recent_capacity=self.config.recent_capacity)
-                    self._estimators[key] = est
-                est.update(agg[rows])
+            self._update_streams(keys, agg)
+
+    def _update_streams(self, keys: list[tuple[str, str]],
+                        agg: np.ndarray) -> None:
+        """Eager host tracking (caller holds ``_estimator_lock``): one
+        batched reservoir update per stream present in the window."""
+        by_stream: dict[tuple[str, str], list[int]] = {}
+        for j, key in enumerate(keys):
+            by_stream.setdefault(key, []).append(j)
+        for key, rows in by_stream.items():
+            self._stream_estimator(key).update(agg[rows])
+
+    def _stream_estimator(self, key: tuple[str, str]
+                          ) -> StreamingQuantileEstimator:
+        """Get-or-create under ``_estimator_lock`` — the single construction
+        site, so eager tracking and device-tracker drains seed identically."""
+        est = self._estimators.get(key)
+        if est is None:
+            est = StreamingQuantileEstimator(
+                self.config.quantile_capacity, seed=stream_seed(key),
+                recent_capacity=self.config.recent_capacity)
+            self._estimators[key] = est
+        return est
+
+    def _apply_tracked(self, key: tuple[str, str],
+                       chunks: list[np.ndarray]) -> None:
+        """Device-tracker materialization callback (runs under
+        ``_estimator_lock``): replay staged windows as the separate update
+        calls they were (see the bitwise contract in quantile_track.py)."""
+        self._stream_estimator(key).apply_chunks(chunks)
+
+    def _sync_tracker_locked(self) -> None:
+        """Materialize staged device samples (caller holds the lock) —
+        every calibration host-pull boundary funnels through this."""
+        if self._tracker is not None:
+            self._tracker.sync()
 
     # -------------------------------------------------------- sync data path
     def score_batch(self, requests: list[ScoringRequest]) -> list[ScoringResponse]:
@@ -981,7 +1084,12 @@ class MuseServer:
         Streams whose predictor has since been decommissioned are excluded —
         the calibration controller must never refit a dead pipeline.  The
         scan copies the dict first: the track stage may insert a stream for
-        a newly seen (tenant, predictor) from another thread mid-scan."""
+        a newly seen (tenant, predictor) from another thread mid-scan.
+        Under device tracking this is a host-pull boundary: staged samples
+        materialize first, so the scan never reads a stale estimator."""
+        if self._tracker is not None:
+            with self._estimator_lock:
+                self._sync_tracker_locked()
         return {k: est for k, est in dict(self._estimators).items()
                 if k[1] in self.predictors}
 
@@ -1000,6 +1108,7 @@ class MuseServer:
         """
         live = self.predictors
         with self._estimator_lock:
+            self._sync_tracker_locked()
             return {key: (est.checkpoint_arrays(), est.checkpoint_meta())
                     for key, est in self._estimators.items()
                     if key[1] in live}
@@ -1022,6 +1131,7 @@ class MuseServer:
         from repro.training.checkpoint import save_checkpoint
 
         with self._estimator_lock:
+            self._sync_tracker_locked()
             snaps = [(key, est.checkpoint_arrays(), est.checkpoint_meta())
                      for key, est in sorted(self._estimators.items())]
         tree = {str(i): arrays for i, (_, arrays, _) in enumerate(snaps)}
@@ -1052,16 +1162,29 @@ class MuseServer:
         # through jax arrays, which truncates float64 reservoirs to float32
         # without x64 enabled
         arrays = load_arrays(directory, step)
-        for i, m in enumerate(specs):
-            est = StreamingQuantileEstimator.from_checkpoint(
-                {"buf": arrays[f"{i}/buf"], "recent": arrays[f"{i}/recent"]},
-                m)
-            self._estimators[(m["tenant"], m["predictor"])] = est
+        with self._estimator_lock:
+            # flush staged device samples into the OLD streams first: they
+            # predate the restore decision and die with the replaced state
+            # (the checkpoint is the warmer state) — they must never drain
+            # into a freshly restored estimator later
+            self._sync_tracker_locked()
+            for i, m in enumerate(specs):
+                est = StreamingQuantileEstimator.from_checkpoint(
+                    {"buf": arrays[f"{i}/buf"],
+                     "recent": arrays[f"{i}/recent"]}, m)
+                self._estimators[(m["tenant"], m["predictor"])] = est
         return len(specs)
 
     def calibration_ready(self, tenant: str, predictor: str) -> bool:
-        """Eq. 5 gate: enough live events for a trustworthy custom T^Q?"""
-        est = self._estimators.get((tenant, predictor))
+        """Eq. 5 gate: enough live events for a trustworthy custom T^Q?
+
+        A calibration host-pull boundary: staged device samples for the
+        stream materialize before the gate reads the count."""
+        key = (tenant, predictor)
+        if self._tracker is not None and self._tracker.pending(key):
+            with self._estimator_lock:
+                self._sync_tracker_locked()
+        est = self._estimators.get(key)
         return est is not None and est.ready(
             self.config.refresh_alert_rate, self.config.refresh_rel_error
         )
@@ -1070,6 +1193,9 @@ class MuseServer:
                                 ref_quantiles, n_levels: int = 256) -> QuantileMap:
         """Refresh path: fit T^Q_v1 from the live (unlabeled) score stream."""
         import jax.numpy as jnp
+        if self._tracker is not None:
+            with self._estimator_lock:
+                self._sync_tracker_locked()
         est = self._estimators[(tenant, predictor)]
         levels = np.linspace(0.0, 1.0, n_levels)
         src = est.quantiles(levels)

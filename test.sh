@@ -12,6 +12,10 @@
 #   ./test.sh --adversarial  the attack-campaign + audit-trail suite (fast
 #                            subset also rides the default lane; the multi-day
 #                            replay itself is additionally marked slow)
+#   ./test.sh --tracking     only the fused device quantile-tracking
+#                            campaign (bitwise host/device estimator parity,
+#                            host-pull boundaries, seed-framing regressions;
+#                            single-device, so it also rides the default lane)
 #   ./test.sh --tiering      only the tiered-bank-store campaigns (random
 #                            promote/demote/publish property tests, engine
 #                            prefetch, rollout warm start, and the
@@ -37,6 +41,7 @@ case "${1:-}" in
   --fleet)       shift; exec python -m pytest -q -m fleet "$@" ;;
   --adversarial) shift; exec python -m pytest -q -m adversarial "$@" ;;
   --tiering)     shift; exec python -m pytest -q -m tiering "$@" ;;
+  --tracking)    shift; exec python -m pytest -q -m tracking "$@" ;;
   --all)         shift; exec python -m pytest -q "$@" ;;
   *)             exec python -m pytest -q -m "not slow and not concurrency and not sharded and not fleet and not tiering" "$@" ;;
 esac

@@ -571,3 +571,62 @@ class TestEngineSoakScenario:
         got = sorted(r.request_id for r in collected)
         assert got == sorted(submitted)
         assert len(set(got)) == len(got)
+
+
+@pytest.mark.concurrency
+class TestPollTimerShutdown:
+    """Regression home for the poll-timer shutdown race: ``_arm_poll`` used
+    to check ``_running``/``_closed`` OUTSIDE the lock, so ``close()`` could
+    cancel the already-fired timer and then lose to the re-arm — a live
+    timer polling into shut-down executors.  An exception escaping
+    ``poll()`` also silently killed the re-arm chain."""
+
+    def test_close_vs_tick_stress(self):
+        """Hammer start -> submit -> close with a sub-millisecond poll
+        interval: after close() returns, the tick chain must be provably
+        dead (no late re-arm) and no tick may ever have polled into the
+        shut-down executors (that surfaces as a tick error)."""
+        server = _fleet(2)
+        for i in range(25):
+            eng = AsyncDispatchEngine(server, max_batch=8, max_wait_ms=0.01,
+                                      poll_interval_ms=0.05)
+            ticks = []
+            orig_poll = eng.poll
+            eng.poll = lambda op=orig_poll, t=ticks: (t.append(1), op())[1]
+            eng.start()
+            # age-out windows so ticks genuinely launch into the executors
+            for j in range(4):
+                eng.submit(_req(f"t{j % 2}", 1000 * i + j))
+            time.sleep(0.0002 * (i % 7))     # vary the close/tick phase
+            eng.close()
+            assert eng.tick_errors == 0, eng.errors
+            assert eng.errors == []
+            # the chain must be dead: tick count stabilizes after close
+            time.sleep(0.002)
+            n1 = len(ticks)
+            time.sleep(0.01)                 # ~200 intervals of grace
+            assert len(ticks) == n1
+
+    def test_tick_failure_surfaces_in_metric_and_chain_survives(self):
+        """An exception escaping poll() is counted (tick_errors + errors),
+        and the timer chain keeps re-arming through failures."""
+        server = _fleet(1)
+        eng = AsyncDispatchEngine(server, poll_interval_ms=1.0)
+        boom = RuntimeError("boom")
+        calls = []
+
+        def bad_expired():
+            calls.append(1)
+            raise boom
+
+        eng.batcher.expired = bad_expired
+        eng.start()
+        deadline = time.monotonic() + 5.0
+        while len(calls) < 3 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert len(calls) >= 3               # chain survived the failures
+        assert eng.tick_errors >= 3
+        assert any(e is boom for _, e in eng.errors)
+        del eng.batcher.expired              # restore for a clean close
+        eng.close()
+        assert eng.tick_errors >= 3

@@ -1,0 +1,365 @@
+"""Fused device quantile tracking: the bitwise-parity campaign.
+
+Proves the ROADMAP's "fuse quantile tracking into the device program" item:
+with ``ServerConfig.track_device`` the track stage is one device dispatch
+(banked ``pre_quantile`` aggregate + scatter into per-stream staging
+buffers, ``kernels/quantile_track.py``) and host estimators materialize
+ONLY at the calibration plane's pull boundaries — with state (reservoir,
+recent ring, pointers, seen counts AND RNG state) bit-for-bit equal to
+eager host tracking, across spill and host-fallback regimes.
+
+Also the regression home for the estimator seed-framing fix
+(``stream_seed``): the old ``"/".join`` derivation collided for
+``("a/b", "c")`` vs ``("a", "b/c")``, correlating supposedly independent
+reservoir acceptance sequences.
+
+Everything here runs on a single CPU device (the staging plane needs one
+device, not many), so the ``tracking`` marker rides the default tier-1
+lane; ``./test.sh --tracking`` runs the campaign alone.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.predictor import PredictorSpec
+from repro.core.quantiles import (
+    StreamingQuantileEstimator,
+    required_sample_size,
+)
+from repro.core.routing import Condition, Intent, RoutingTable, ScoringRule
+from repro.core.transforms import QuantileMap
+from repro.kernels.quantile_track import DeviceQuantileTracker, _segment_plan
+from repro.serving import (
+    AsyncDispatchEngine,
+    CalibrationController,
+    MuseServer,
+    RefreshPolicy,
+    ServerConfig,
+)
+from repro.serving.server import stream_seed
+from repro.serving.types import ScoringRequest
+
+pytestmark = pytest.mark.tracking
+
+DIM = 8
+TENANTS = 4
+REF = np.linspace(0.0, 1.0, 64) ** 2
+
+
+def _linear_model(seed: int, dim: int = DIM):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 1, dim).astype(np.float32)
+
+    def score(x):
+        x = np.asarray(x, np.float32)
+        return jnp.asarray(1.0 / (1.0 + np.exp(-(x @ w))))
+
+    return score
+
+
+FACTORIES = {f"m{i}": (lambda i=i: _linear_model(i)) for i in (1, 2)}
+
+
+def _server(track_device: bool, *, staging: int = 4096, capacity: int = 256,
+            recent: int = 32, track: bool = True) -> MuseServer:
+    rules = tuple(ScoringRule(Condition(tenants=(f"t{i}",)), f"p{i}")
+                  for i in range(TENANTS)) + \
+        (ScoringRule(Condition(), "p0"),)
+    server = MuseServer(
+        RoutingTable(rules, (), version="v1"),
+        ServerConfig(track_quantiles=track, track_device=track_device,
+                     track_staging=staging, quantile_capacity=capacity,
+                     recent_capacity=recent, refresh_alert_rate=0.05,
+                     refresh_rel_error=0.5))
+    for i in range(TENANTS):
+        server.deploy(PredictorSpec(f"p{i}", ("m1", "m2"), (0.2, 0.4),
+                                    (1.0, 1.0), QuantileMap.identity(64)),
+                      FACTORIES)
+    return server
+
+
+def _req(tenant: str, seed: int) -> ScoringRequest:
+    rng = np.random.default_rng(seed)
+    return ScoringRequest(intent=Intent(tenant=tenant),
+                          features=rng.normal(0, 1, DIM).astype(np.float32))
+
+
+def _windows(n_mixed: int = 18, w: int = 48, seed: int = 7):
+    """A deterministic request stream: mixed-tenant windows plus one large
+    single-tenant window (> recent_capacity per stream, so the recent
+    ring's bulk-reset branch is exercised, not just the rolling writes)."""
+    rng = np.random.default_rng(seed)
+    out, k = [], 0
+    for _ in range(n_mixed):
+        out.append([_req(f"t{rng.integers(0, TENANTS)}", k := k + 1)
+                    for _ in range(w)])
+    out.append([_req("t0", k := k + 1) for _ in range(3 * 32 + 5)])
+    return out
+
+
+def _drive(server, windows):
+    return [server.score_batch(win) for win in windows]
+
+
+def _assert_snapshots_equal(a: MuseServer, b: MuseServer) -> None:
+    ca, cb = (a.snapshot_estimator_checkpoints(),
+              b.snapshot_estimator_checkpoints())
+    assert ca.keys() == cb.keys()
+    for key in ca:
+        (arr_a, meta_a), (arr_b, meta_b) = ca[key], cb[key]
+        assert meta_a == meta_b, key          # seen/pos/filled/rng_state
+        # live prefixes only: checkpoints store full-capacity buffers for
+        # static restore shapes, and the tail past filled/recent_filled is
+        # uninitialized memory, not state
+        nf, nr = meta_a["filled"], meta_a["recent_filled"]
+        assert np.array_equal(arr_a["buf"][:nf], arr_b["buf"][:nf]), key
+        assert np.array_equal(arr_a["recent"][:nr],
+                              arr_b["recent"][:nr]), key
+
+
+class TestBitwiseParity:
+    @pytest.mark.parametrize("staging", [4096, 64, 8])
+    def test_checkpoint_state_matches_eager_host_tracking(self, staging):
+        """The tentpole contract: reservoir + recent ring + RNG state equal
+        bit-for-bit across staging regimes — large staging (no pulls until
+        the snapshot), small staging (spill-before-overflow drains), and
+        tiny staging (whole windows fall back to the eager host path)."""
+        host, dev = _server(False), _server(True, staging=staging)
+        windows = _windows()
+        _drive(host, windows)
+        _drive(dev, windows)
+        tracker = dev._tracker
+        if staging == 4096:
+            assert tracker.pending_total() > 0    # nothing pulled yet
+            assert tracker.spills == 0
+            assert dev.metrics["track_staged_windows"] > 0
+        elif staging == 64:
+            assert tracker.spills > 0
+            assert dev.metrics["track_staged_windows"] > 0
+        else:
+            assert tracker.host_fallbacks > 0     # stream share > plane
+        _assert_snapshots_equal(host, dev)
+        # post-sync everything is materialized; a second pull is stable
+        assert tracker.pending_total() == 0
+        _assert_snapshots_equal(host, dev)
+
+    def test_scores_unaffected_by_tracking_mode(self):
+        """Tracking rides behind the response path: OFF / eager host /
+        device-fused must serve identical scores."""
+        off = _server(False, track=False)
+        host, dev = _server(False), _server(True)
+        windows = _windows(n_mixed=6)
+        r_off, r_host, r_dev = (_drive(off, windows), _drive(host, windows),
+                                _drive(dev, windows))
+        for w_off, w_host, w_dev in zip(r_off, r_host, r_dev):
+            for a, b, c in zip(w_off, w_host, w_dev):
+                assert a.score == b.score == c.score
+
+    def test_quantiles_after_sync_match_eager(self):
+        host, dev = _server(False), _server(True)
+        windows = _windows(n_mixed=8)
+        _drive(host, windows)
+        _drive(dev, windows)
+        levels = np.linspace(0.01, 0.99, 33)
+        eh = host.estimator_streams()
+        ed = dev.estimator_streams()      # host-pull boundary: syncs first
+        assert eh.keys() == ed.keys() and eh
+        for key in eh:
+            assert np.array_equal(eh[key].quantiles(levels),
+                                  ed[key].quantiles(levels)), key
+
+
+class TestHostPullBoundaries:
+    def test_calibration_ready_sees_staged_samples(self):
+        """Eq.-5 gate is a host-pull boundary: staged device samples count
+        without any explicit sync by the caller."""
+        dev = _server(True)
+        gate = required_sample_size(0.05, 0.5)
+        n = 0
+        while n <= gate:
+            w = [_req("t1", n + i) for i in range(64)]
+            dev.score_batch(w)
+            n += 64
+        assert dev._tracker.pending(("t1", "p1")) > 0
+        assert dev.calibration_ready("t1", "p1")
+        # the gate's pull materialized the stream
+        assert dev._estimators[("t1", "p1")].count == n
+
+    def test_save_restore_gate_refresh_ships(self, tmp_path):
+        """The PR-5 persistence contract through the device tracker:
+        save -> restore on a fresh replica -> Eq.-5 gate passes -> a
+        calibration refresh ships a new generation."""
+        gate = required_sample_size(0.05, 0.5)
+        src = _server(True, capacity=131072, recent=4096)
+        rng = np.random.default_rng(3)
+        k = 0
+        for _ in range((2 * gate) // 64 + 2):
+            src.score_batch([_req(f"t{rng.integers(0, 2)}", k := k + 1)
+                             for _ in range(64)])
+        src.save_estimators(str(tmp_path), step=1)
+
+        dst = _server(True, capacity=131072, recent=4096)
+        restored = dst.restore_estimators(str(tmp_path), step=1)
+        assert restored >= 2
+        _assert_snapshots_equal(src, dst)
+        ready = [t for t in ("t0", "t1")
+                 if dst.calibration_ready(t, f"p{t[1]}")]
+        assert ready                                    # gate passed warm
+        policy = RefreshPolicy(alert_rate=0.05, rel_error=0.5, n_levels=64)
+        res = CalibrationController(dst, REF, policy).refresh_fleet()
+        shipped = {(r.tenant, r.predictor) for r in res.refreshed}
+        assert {(t, f"p{t[1]}") for t in ready} <= shipped
+        assert dst.bank_generation == res.generation > 0
+        # tracking keeps staging against the REFRESHED plane
+        dst.score_batch([_req("t0", 10_000 + i) for i in range(48)])
+        assert dst._tracker.pending(("t0", "p0")) > 0 \
+            or dst.metrics["track_staged_windows"] > 0
+
+    def test_decommission_drops_staged_stream(self):
+        """A dead predictor's staged device samples must never materialize
+        into a later stream under the same name."""
+        dev = _server(True)
+        dev.score_batch([_req("t1", i) for i in range(40)])
+        assert dev._tracker.pending(("t1", "p1")) == 40
+        dev.decommission("p1")
+        assert dev._tracker.pending(("t1", "p1")) == 0
+        assert ("t1", "p1") not in dev._estimators
+        # redeploy under the same name: stream restarts from zero
+        dev.deploy(PredictorSpec("p1", ("m1", "m2"), (0.2, 0.4), (1.0, 1.0),
+                                 QuantileMap.identity(64)), FACTORIES)
+        dev.score_batch([_req("t1", 100 + i) for i in range(16)])
+        streams = dev.estimator_streams()
+        assert streams[("t1", "p1")].count == 16
+
+
+class TestTrackerUnit:
+    def test_segment_plan_ranks_and_counts(self):
+        slots = np.array([2, 0, 2, 2, 0, 5])
+        ranks, uniq, incoming = _segment_plan(slots)
+        assert ranks.tolist() == [0, 0, 1, 2, 1, 0]   # arrival order kept
+        assert uniq.tolist() == [0, 2, 5]
+        assert incoming.tolist() == [2, 3, 1]
+
+    def _pair(self, staging: int):
+        ests: dict = {}
+
+        def apply(key, chunks):
+            ests.setdefault(key, StreamingQuantileEstimator(
+                capacity=128, seed=11, recent_capacity=16)).apply_chunks(
+                chunks)
+
+        return DeviceQuantileTracker(apply, staging_capacity=staging), ests
+
+    @pytest.mark.parametrize("staging", [512, 16, 2])
+    def test_append_agg_replay_matches_eager(self, staging):
+        """Tracker-level bitwise parity for the precomputed-aggregate path
+        (what tiered stores use), across spill/fallback regimes."""
+        tracker, ests = self._pair(staging)
+        eager: dict = {}
+        rng = np.random.default_rng(0)
+        for _ in range(30):
+            b = int(rng.integers(1, 12))
+            keys = [("t%d" % rng.integers(0, 3), "p") for _ in range(b)]
+            # f32 like the serving path: the staging plane is f32, and the
+            # eager comparator must see the same values, not f64 parents
+            agg = rng.uniform(0, 1, b).astype(np.float32)
+            if not tracker.append_agg(keys, agg):
+                for key in dict.fromkeys(keys):
+                    rows = [j for j, k in enumerate(keys) if k == key]
+                    ests.setdefault(key, StreamingQuantileEstimator(
+                        capacity=128, seed=11,
+                        recent_capacity=16)).update(agg[rows])
+            for key in dict.fromkeys(keys):
+                rows = [j for j, k in enumerate(keys) if k == key]
+                eager.setdefault(key, StreamingQuantileEstimator(
+                    capacity=128, seed=11,
+                    recent_capacity=16)).update(agg[rows])
+        tracker.sync()
+        assert ests.keys() == eager.keys() and ests
+        for key in eager:
+            meta = ests[key].checkpoint_meta()
+            assert meta == eager[key].checkpoint_meta()
+            assert np.array_equal(ests[key].values(), eager[key].values())
+            assert np.array_equal(ests[key].recent(), eager[key].recent())
+
+    def test_empty_window_is_a_noop(self):
+        tracker, ests = self._pair(8)
+        assert tracker.append_agg([], np.empty(0))
+        assert tracker.pending_total() == 0 and not ests
+
+    def test_drop_where_frees_and_reuses_slots(self):
+        tracker, ests = self._pair(16)
+        tracker.append_agg([("a", "p"), ("b", "p")], np.array([0.1, 0.2]))
+        assert tracker.drop_where(lambda k: k[0] == "a") == 1
+        assert tracker.pending(("a", "p")) == 0
+        tracker.append_agg([("c", "p")], np.array([0.3]))   # reuses slot
+        tracker.sync()
+        assert set(ests) == {("b", "p"), ("c", "p")}
+        assert ests[("c", "p")].count == 1
+
+    def test_slot_growth_preserves_staged_data(self):
+        tracker, ests = self._pair(4)
+        keys = [(f"t{i}", "p") for i in range(200)]   # forces _grow twice
+        agg = (np.arange(200) / 200.0).astype(np.float32)
+        tracker.append_agg(keys, agg)
+        assert tracker.pending(("t199", "p")) == 1
+        tracker.sync()
+        assert len(ests) == 200
+        assert float(ests[("t42", "p")].values()[0]) == float(agg[42])
+
+
+class TestEngineIntegration:
+    def test_engine_track_lane_launches_fused_program(self):
+        """The engine's [track] lane through the device tracker: same
+        windows as a synchronous eager server => bitwise-equal estimator
+        state after drain (the track stage runs a stage behind, drain is
+        the barrier)."""
+        host = _server(False)
+        dev = _server(True)
+        windows = _windows(n_mixed=8, w=32)
+        _drive(host, windows)
+        # max_batch > the largest driven window: the facade must form the
+        # SAME windows the sync server dispatched, or the update-call
+        # boundaries (and thus RNG consumption) would legitimately differ
+        with AsyncDispatchEngine(dev, max_batch=128) as engine:
+            for win in windows:
+                engine.score_batch(win)
+            engine.drain()
+        assert engine.track_errors == 0
+        assert dev.metrics["track_staged_windows"] > 0
+        _assert_snapshots_equal(host, dev)
+
+
+class TestSeedFraming:
+    def test_stream_seed_collision_regression(self):
+        """'/'-joined framing hashed ("a/b","c") and ("a","b/c") to the
+        same seed; framed derivation must not."""
+        assert stream_seed(("a/b", "c")) != stream_seed(("a", "b/c"))
+        assert stream_seed(("a/b", "")) != stream_seed(("a", "b/"))
+        assert stream_seed(("t", "p")) == stream_seed(("t", "p"))
+
+    def test_stream_seed_legacy_compat_for_unambiguous_keys(self):
+        """Slash-free keys — where the join is injective — keep the legacy
+        digest, so fixing the collision does not reshuffle the acceptance
+        sequence of every ordinary stream in existing deployments."""
+        for key in [("t0", "p0"), ("tenant-a", "fraud_v2"), ("a", ""),
+                    ("", "")]:
+            assert stream_seed(key) == zlib.crc32("/".join(key).encode())
+        # ambiguous keys leave the legacy namespace entirely (0xff-led
+        # framing is not valid UTF-8, so no legacy payload can alias it)
+        assert stream_seed(("a/b", "c")) != zlib.crc32(b"a/b/c")
+
+    def test_formerly_collided_streams_decorrelated(self):
+        """Identical inputs through the two formerly-collided keys must now
+        produce different reservoir acceptance sequences."""
+        data = np.random.default_rng(5).uniform(0, 1, 4000)
+        a = StreamingQuantileEstimator(capacity=64,
+                                       seed=stream_seed(("a/b", "c")))
+        b = StreamingQuantileEstimator(capacity=64,
+                                       seed=stream_seed(("a", "b/c")))
+        a.update(data)
+        b.update(data)
+        assert not np.array_equal(a.values(), b.values())

@@ -252,3 +252,38 @@ class TestMergeableSketches:
         assert merge_rank_error_bound(256, 256) \
             == pytest.approx(2 * merge_rank_error_bound(256))
         assert merge_rank_error_bound() == 0.0
+
+
+class TestUpdateChunkBound:
+    """Regression for the update() chunk split: ``len // 65536`` (floor)
+    allowed chunks up to 131071 — double the documented 65536 bound.
+    Ceil division caps every chunk at the bound for all lengths."""
+
+    @pytest.mark.parametrize("n", [0, 1, 65535, 65536, 65537,
+                                   131071, 131072, 131073])
+    def test_chunks_respect_documented_bound(self, n):
+        est = StreamingQuantileEstimator(capacity=128, seed=0,
+                                         recent_capacity=16)
+        seen = []
+        orig = est._update_chunk
+
+        def spy(chunk):
+            seen.append(len(chunk))
+            return orig(chunk)
+
+        est._update_chunk = spy
+        est.update(np.zeros(n))
+        assert sum(seen) == n
+        assert all(c <= 65536 for c in seen)
+        # no empty chunks except the degenerate n=0 call
+        if n:
+            assert all(c > 0 for c in seen)
+        assert est.count == n
+
+    def test_split_preserves_sample_order(self):
+        """Boundary case straddling the old bug (one 131071-sample call):
+        the reservoir fill phase must still see samples in arrival order."""
+        est = StreamingQuantileEstimator(capacity=131072, seed=0)
+        data = np.arange(131071, dtype=np.float64)
+        est.update(data)
+        assert np.array_equal(est.values(), data)
